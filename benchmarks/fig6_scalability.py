@@ -1,0 +1,53 @@
+"""Paper Fig. 6 analogue: scalability as the interconnect grows.
+
+The paper scales the accelerator (DSPs) and interface width (128→1024 bit)
+and finds the baseline's frequency collapses (<25 MHz at 1024-bit) while
+Medusa holds 200-225 MHz.  On TPU the frequency race becomes: how do wall
+time, data movement and op counts of the two fabrics scale with N?  The
+crossbar's gather cost grows O(N) per word; Medusa's roll/select network
+grows O(log N) per word — we sweep N = 8..64 (interface 128→1024 "bits")
+and report the measured ratio (the "frequency gain" analogue).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (read_network_medusa, read_network_crossbar,
+                        read_network_oracle, medusa_mux_count,
+                        baseline_mux_count)
+from benchmarks.common import emit, time_us, bytes_accessed
+
+W_ACC = 16
+GROUPS = 16
+
+
+def run() -> list:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for n in (8, 16, 32, 64):
+        lines = jax.random.normal(key, (GROUPS * n, n, W_ACC),
+                                  dtype=jnp.bfloat16)
+        ref = read_network_oracle(lines, n)
+        med = jax.jit(lambda x, n=n: read_network_medusa(x, n))
+        cbar = jax.jit(lambda x, n=n: read_network_crossbar(x, n))
+        assert np.allclose(np.asarray(med(lines), np.float32),
+                           np.asarray(ref, np.float32))
+        assert np.allclose(np.asarray(cbar(lines), np.float32),
+                           np.asarray(ref, np.float32))
+        t_med = time_us(med, lines)
+        t_cbar = time_us(cbar, lines)
+        w_line = n * W_ACC
+        rows.append((f"fig6/W{w_line}_N{n}/medusa_us", t_med, ""))
+        rows.append((f"fig6/W{w_line}_N{n}/crossbar_us", t_cbar, ""))
+        rows.append((f"fig6/W{w_line}_N{n}/speedup", None,
+                     f"{t_cbar / t_med:.2f}x"))
+        rows.append((f"fig6/W{w_line}_N{n}/mux_ratio_model", None,
+                     f"{baseline_mux_count(w_line, n) / medusa_mux_count(w_line, n):.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,73 @@
+"""Production-path benchmark: the KV-cache layout engine (medusa vs crossbar
+vs oracle) inside a real decode-attention computation.
+
+This is the paper's technique where it actually lives in the framework: the
+serve_step reads the line-major KV cache through the interconnect.  We time
+a full decode attention (batch x heads x 32k cache) under each fabric and
+census the lowered HLO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models import common as cm
+from benchmarks.common import emit, time_us, hlo_op_census
+
+B, T, HKV, D = 4, 4096, 4, 64
+
+
+def _attn(kv_layout: str):
+    cfg = dataclasses.replace(get_smoke("starcoder2-15b"),
+                              kv_layout=kv_layout, n_kv_heads=HKV,
+                              n_heads=HKV * 2, head_dim=D)
+
+    def f(q, ck, cv, pos):
+        ck_p = cm._kv_port_major(ck, cfg)
+        cv_p = cm._kv_port_major(cv, cfg)
+        kv_pos = jnp.arange(T)
+        return cm._decode_attention(q, ck_p, cv_p, pos, kv_pos,
+                                    kv_pos <= pos, 0)
+    return jax.jit(f)
+
+
+def run() -> list:
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, 1, HKV * 2, D), jnp.bfloat16)
+    ck = jax.random.normal(key, (B, T, HKV, D), jnp.bfloat16)
+    cv = jax.random.normal(key, (B, T, HKV, D), jnp.bfloat16)
+    pos = jnp.int32(T - 1)
+
+    outs = {}
+    rows = []
+    # Fabric comparison under XLA lowering (the Pallas kernel's interpret
+    # mode is a Python-level correctness vehicle, not a timing vehicle — the
+    # kernel suite sweeps it separately in tests/test_kernels.py).
+    from repro.kernels import ops as kops
+    was = kops.kernels_enabled()
+    kops.use_kernels(False)
+    try:
+        for layout in ("oracle", "crossbar", "medusa", "fused"):
+            fn = _attn(layout)
+            outs[layout] = np.asarray(fn(q, ck, cv, pos), np.float32)
+            census = hlo_op_census(fn, q, ck, cv, pos)
+            rows.append((f"kv_layout/{layout}/us",
+                         time_us(fn, q, ck, cv, pos), ""))
+            rows.append((f"kv_layout/{layout}/gather_ops", None,
+                         census.get("gather", 0)
+                         + census.get("dynamic-slice", 0)))
+    finally:
+        kops.use_kernels(was)
+    assert np.allclose(outs["oracle"], outs["crossbar"], atol=1e-3)
+    assert np.allclose(outs["oracle"], outs["medusa"], atol=1e-3)
+    assert np.allclose(outs["oracle"], outs["fused"], atol=1e-3)
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

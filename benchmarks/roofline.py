@@ -1,0 +1,73 @@
+"""Roofline table from the dry-run results (§Roofline deliverable).
+
+Reads ``results/dryrun/*.json`` and prints, per (arch x shape x mesh): the
+three roofline terms, dominant bottleneck, MODEL_FLOPS ratio, and per-device
+memory.  ``--markdown`` emits the EXPERIMENTS.md table.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def load_results() -> list:
+    out = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def run() -> list:
+    rows = []
+    for r in load_results():
+        tag = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r.get("status") != "ok":
+            rows.append((f"roofline/{tag}/status", None, "ERROR"))
+            continue
+        roof = r["roofline"]
+        rows.append((f"roofline/{tag}/bound_s", None,
+                     f"{roof['bound_s']:.3e}"))
+        rows.append((f"roofline/{tag}/dominant", None, roof["dominant"]))
+        ratio = r.get("useful_compute_ratio")
+        rows.append((f"roofline/{tag}/useful_ratio", None,
+                     f"{ratio:.3f}" if ratio else "n/a"))
+    return rows
+
+
+def markdown() -> str:
+    lines = ["| arch | shape | mesh | compute s | memory s | collective s | "
+             "dominant | useful ratio | temp GB/dev |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in load_results():
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"ERROR | | | | | |")
+            continue
+        roof = r["roofline"]
+        mem = (r["memory"].get("temp_bytes") or 0) / 1e9
+        ratio = r.get("useful_compute_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {roof['compute_s']:.2e} | {roof['memory_s']:.2e} "
+            f"| {roof['collective_s']:.2e} | **{roof['dominant']}** "
+            f"| {ratio:.3f} | {mem:.2f} |" if ratio is not None else
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {roof['compute_s']:.2e} | {roof['memory_s']:.2e} "
+            f"| {roof['collective_s']:.2e} | **{roof['dominant']}** "
+            f"| n/a | {mem:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    if "--markdown" in sys.argv:
+        print(markdown())
+    else:
+        from benchmarks.common import emit
+        emit(run())

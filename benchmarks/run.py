@@ -1,0 +1,42 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Sub-benchmarks:
+  table_complexity       — §II-B/III-D mux-count model (paper-claim validation)
+  table1_baseline_vs_axis — Table I analogue (baseline fairness)
+  table2_resource        — Table II analogue (medusa vs crossbar networks)
+  fig6_scalability       — Fig. 6 analogue (scaling sweep N=8..64)
+  kv_layout              — production KV-cache path, per-fabric
+  moe_dispatch           — medusa ring vs XLA all-to-all (multi-device)
+  roofline               — dry-run roofline table (if results exist)
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks.common import emit
+
+
+def main() -> None:
+    mods = ["table_complexity", "table1_baseline_vs_axis", "table2_resource",
+            "fig6_scalability", "kv_layout", "moe_dispatch", "roofline"]
+    only = [a for a in sys.argv[1:] if not a.startswith("-")]
+    failures = 0
+    print("name,us_per_call,derived")
+    for name in mods:
+        if only and name not in only:
+            continue
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            emit(mod.run())
+        except Exception as e:
+            failures += 1
+            print(f"{name},,{e!r}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

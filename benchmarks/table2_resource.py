@@ -1,0 +1,75 @@
+"""Paper Table II analogue: Medusa vs crossbar data-transfer networks on TPU.
+
+FPGA LUT/FF counts have no TPU meaning; the resource contrast becomes the
+*lowered HLO*: the crossbar routing materialises gather ops and index tensors,
+Medusa lowers to static slice/concat/select chains that fuse.  At the paper
+design point (512-bit line = 32 ports x 16-bit; we map bit→bf16 element) we
+measure, for read and write networks separately:
+
+* gather-op count and total HLO ops (the "logic" census),
+* bytes accessed (cost_analysis) — the wiring/data-movement analogue,
+* median CPU wall time per call (relative, same host→ same units).
+
+Identical semantics are asserted before measuring.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (read_network_medusa, read_network_crossbar,
+                        read_network_oracle, write_network_medusa,
+                        write_network_crossbar)
+from benchmarks.common import emit, time_us, hlo_op_census, bytes_accessed
+
+N_PORTS = 32
+W_ACC = 16          # "16-bit word" → 16 bf16 elements per word
+GROUPS = 32         # 32-line burst per port (paper MaxBurst)
+
+
+def _lines():
+    key = jax.random.PRNGKey(0)
+    return jax.random.normal(key, (GROUPS * N_PORTS, N_PORTS, W_ACC),
+                             dtype=jnp.bfloat16)
+
+
+def run() -> list:
+    lines = _lines()
+    banked_ref = read_network_oracle(lines, N_PORTS)
+
+    med = jax.jit(lambda x: read_network_medusa(x, N_PORTS))
+    cbar = jax.jit(lambda x: read_network_crossbar(x, N_PORTS))
+    assert np.allclose(np.asarray(med(lines), np.float32),
+                       np.asarray(banked_ref, np.float32))
+    assert np.allclose(np.asarray(cbar(lines), np.float32),
+                       np.asarray(banked_ref, np.float32))
+
+    wmed = jax.jit(lambda b: write_network_medusa(b, N_PORTS))
+    wcbar = jax.jit(lambda b: write_network_crossbar(b, N_PORTS))
+    assert np.allclose(np.asarray(wmed(banked_ref), np.float32),
+                       np.asarray(lines, np.float32))
+    assert np.allclose(np.asarray(wcbar(banked_ref), np.float32),
+                       np.asarray(lines, np.float32))
+
+    rows = []
+    for name, fn, arg in (
+            ("read/medusa", med, lines), ("read/crossbar", cbar, lines),
+            ("write/medusa", wmed, banked_ref),
+            ("write/crossbar", wcbar, banked_ref)):
+        census = hlo_op_census(lambda x: fn(x), arg)
+        gathers = census.get("gather", 0) + census.get("dynamic-slice", 0) \
+            + census.get("scatter", 0)
+        by = bytes_accessed(lambda x: fn(x), arg)
+        us = time_us(fn, arg)
+        rows.append((f"table2/{name}/us", us, ""))
+        rows.append((f"table2/{name}/gather_ops", None, gathers))
+        rows.append((f"table2/{name}/total_hlo_ops", None,
+                     sum(census.values())))
+        rows.append((f"table2/{name}/bytes_accessed", None, int(by)))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,42 @@
+"""Serving example: batched prefill + decode through the Medusa KV path.
+
+Generates with all three interconnect fabrics and checks they emit identical
+tokens (the paper's drop-in-replacement claim, §III-F), then reports decode
+throughput per fabric.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.data import SyntheticLM
+from repro.models import api
+
+BASE = get_smoke("gemma3-12b")           # hybrid local:global — both cache kinds
+BATCH, PROMPT, GEN = 4, 24, 24
+
+data = SyntheticLM(BASE, batch=BATCH, seq=PROMPT)
+prompt = jnp.asarray(data.batch_at(0)["tokens"])
+params = api.init_params(BASE, jax.random.PRNGKey(0))
+
+outs = {}
+for layout in ("oracle", "crossbar", "medusa"):
+    cfg = dataclasses.replace(BASE, kv_layout=layout)
+    t0 = time.time()
+    toks = api.greedy_generate(params, prompt, cfg, steps=GEN,
+                               t_max=PROMPT + GEN)
+    toks = np.asarray(toks)
+    dt = time.time() - t0
+    outs[layout] = toks
+    print(f"{layout:9s}: {BATCH * GEN / dt:7.1f} tok/s   "
+          f"sample={toks[0][:8].tolist()}")
+
+assert np.array_equal(outs["oracle"], outs["crossbar"])
+assert np.array_equal(outs["oracle"], outs["medusa"])
+print("\nall three fabrics generate IDENTICAL tokens — drop-in replacement ✓")

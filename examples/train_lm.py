@@ -1,0 +1,78 @@
+"""End-to-end driver: train a ~100M-param dense LM for a few hundred steps.
+
+Uses the full production stack — pjit train step (grad accumulation, AdamW),
+deterministic bigram data pipeline, checkpointing, fault-tolerant runner with
+an injected node failure at step 120 (recovery is exact) — on a 1x1 CPU mesh.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.checkpoint import CheckpointManager
+from repro.data import SyntheticLM
+from repro.launch.steps import build_train_step
+from repro.models import api
+from repro.optim import init_opt_state
+from repro.runtime import TrainingRunner, FaultInjector, StragglerDetector
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--ckpt", default="/tmp/repro_example_train")
+args = ap.parse_args()
+
+# ~100M params: 12 layers x d_model 768 (GPT-2-small-class), vocab 32k
+cfg = ModelConfig(name="lm-100m", family="dense", n_layers=12, d_model=768,
+                  n_heads=12, n_kv_heads=4, d_ff=2048, vocab_size=32_000,
+                  mlp="swiglu", remat="none", dtype="float32")
+print(f"params: {cfg.param_count() / 1e6:.1f}M")
+
+BATCH, SEQ = 8, 128
+mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                         ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+tcfg = TrainConfig(lr=3e-3, warmup_steps=30, total_steps=args.steps,
+                   grad_accum=1, zero1=False)
+built = build_train_step(cfg, ShapeConfig("ex", SEQ, BATCH, "train"),
+                         mesh, tcfg)
+step = jax.jit(built.fn, in_shardings=built.in_shardings,
+               out_shardings=built.out_shardings, donate_argnums=(0,))
+
+params = api.init_params(cfg, jax.random.PRNGKey(0))
+state = {"params": params, "opt": init_opt_state(params, tcfg, master=False)}
+data = SyntheticLM(cfg, batch=BATCH, seq=SEQ, seed=0, branching=4,
+                   vocab_limit=256)
+
+losses = []
+t0 = time.time()
+
+
+def on_metrics(s, m):
+    losses.append(float(m["loss"]))
+    if s % 20 == 0:
+        print(f"step {s:4d} loss {losses[-1]:.4f} "
+              f"({(time.time()-t0)/max(len(losses),1):.2f}s/step)", flush=True)
+
+
+def step_fn(state, batch):
+    with mesh:
+        return step(state, {k: jnp.asarray(v) for k, v in batch.items()})
+
+
+runner = TrainingRunner(step_fn, data,
+                        CheckpointManager(args.ckpt, every=50, keep=2),
+                        straggler=StragglerDetector(),
+                        fault_injector=FaultInjector((120,)))
+state, end = runner.run(state, 0, args.steps, on_metrics=on_metrics)
+
+first, last = np.mean(losses[:20]), np.mean(losses[-20:])
+print(f"\ndone: steps={end} restarts={runner.restarts} "
+      f"loss {first:.3f} -> {last:.3f}")
+assert last < first - 0.5, "loss should drop substantially on the bigram task"
+print("loss decreased through an injected node failure — FT path exercised.")

@@ -1,0 +1,5 @@
+from repro.checkpoint.checkpointing import (save_checkpoint, restore_checkpoint,
+                                            latest_step, CheckpointManager)
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "CheckpointManager"]

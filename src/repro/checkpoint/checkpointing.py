@@ -1,0 +1,118 @@
+"""Checkpointing: atomic, resumable, mesh-elastic.
+
+State pytrees are flattened with key paths; leaves are gathered to host numpy
+and written to a per-step directory via ``np.savez`` plus a JSON manifest.
+Writes are atomic (tmp dir + rename) so a preemption mid-save never corrupts
+the latest checkpoint.  Restore maps leaves back by key path onto a template
+pytree and ``device_put``s with the *target* sharding — which may belong to a
+different mesh than the one that saved (elastic re-mesh: checkpoints are
+host-side and layout-free).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = jax.tree_util.keystr(path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+            # ml_dtypes (bf16/fp8) do not survive np.savez — store as f32,
+            # which is exact for bf16 (f32 is a superset); restore casts back.
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, state: Any,
+                    extra: Optional[dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(state)
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k: v for k, v in flat.items()})
+        manifest = {"step": step, "keys": sorted(flat.keys()),
+                    "extra": extra or {}}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        final = os.path.join(directory, f"step_{step:08d}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                      # atomic publish
+        return final
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, template: Any,
+                       shardings: Any = None) -> tuple[Any, dict]:
+    """Restore onto ``template`` structure; optionally placed with
+    ``shardings`` (same pytree structure, NamedSharding leaves) — the target
+    mesh need not match the saving mesh."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays = np.load(os.path.join(path, "arrays.npz"))
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(paths))
+    leaves = []
+    for (kp, leaf), shd in zip(paths, shard_leaves):
+        key = jax.tree_util.keystr(kp)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        arr = np.asarray(jnp.asarray(arr).astype(leaf.dtype))
+        leaves.append(jax.device_put(arr, shd) if shd is not None
+                      else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["extra"]
+
+
+class CheckpointManager:
+    """Keeps the last ``keep`` checkpoints, saves every ``every`` steps."""
+
+    def __init__(self, directory: str, every: int = 100, keep: int = 3):
+        self.directory = directory
+        self.every = every
+        self.keep = keep
+
+    def maybe_save(self, step: int, state, extra: Optional[dict] = None):
+        if step % self.every:
+            return None
+        path = save_checkpoint(self.directory, step, state, extra)
+        self._gc()
+        return path
+
+    def _gc(self):
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(int(m.group(1)) for d in os.listdir(self.directory)
+                       if (m := re.fullmatch(r"step_(\d+)", d)))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

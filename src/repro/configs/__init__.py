@@ -1,0 +1,7 @@
+from repro.configs.base import (ModelConfig, MoEConfig, SSMConfig, RGLRUConfig,
+                                ShapeConfig, TrainConfig, SHAPES)
+from repro.configs.registry import ARCHS, get_config, get_smoke, get_shape, cells
+
+__all__ = ["ModelConfig", "MoEConfig", "SSMConfig", "RGLRUConfig",
+           "ShapeConfig", "TrainConfig", "SHAPES", "ARCHS", "get_config",
+           "get_smoke", "get_shape", "cells"]

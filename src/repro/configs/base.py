@@ -1,0 +1,205 @@
+"""Configuration schema for every architecture and run in the framework.
+
+``ModelConfig`` is a frozen dataclass consumed by ``repro.models`` (family
+dispatch), ``repro.parallel`` (sharding rules) and ``repro.launch`` (dry-run,
+train, serve).  One module per assigned architecture lives in this package and
+exports ``CONFIG`` (exact paper/assignment numbers) and ``smoke()`` (a reduced
+same-family config for CPU tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    expert_d_ff: int
+    capacity_factor: float = 1.25
+    # "medusa" = ring-rotation (ppermute) dispatch schedule; "xla" = all_to_all.
+    dispatch: str = "xla"
+    # pad the expert dim to this count with never-routed dead experts so EP
+    # divides the mesh evenly (beyond-paper optimisation; 0 = no padding).
+    pad_to: int = 0
+
+    @property
+    def n_experts_padded(self) -> int:
+        return max(self.pad_to, self.n_experts)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 128              # SSD chunk length for training
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    lru_width: int = 0            # 0 → d_model
+    conv_width: int = 4
+    c: float = 8.0                # RG-LRU gate sharpness constant
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | ssm | hybrid | moe | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 → d_model // n_heads
+    # --- attention pattern -------------------------------------------------
+    # 'A' full attention, 'L' local sliding-window, 'R' recurrent (RG-LRU),
+    # 'M' mamba2/SSD.  The pattern tiles over layers (truncated to n_layers).
+    block_pattern: str = "A"
+    sliding_window: int = 0       # window for 'L' layers
+    rope_theta: float = 10_000.0
+    rope_theta_global: float = 0.0  # gemma3 uses a larger theta on 'A' layers
+    norm: str = "rms"             # rms | ln
+    mlp: str = "swiglu"           # swiglu | geglu | gelu
+    tie_embeddings: bool = True
+    # --- sub-family configs --------------------------------------------------
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    # --- enc-dec (whisper) ----------------------------------------------------
+    encoder_layers: int = 0       # >0 → encoder-decoder model
+    encoder_seq: int = 1500       # precomputed frame embeddings (stub frontend)
+    # --- vlm (internvl) ---------------------------------------------------------
+    n_patches: int = 0            # >0 → patch embeddings prepended (stub frontend)
+    # --- numerics / memory ------------------------------------------------------
+    dtype: str = "bfloat16"
+    remat: str = "full"           # full | dots | none
+    scan_layers: bool = True
+    # --- interconnect (the paper's feature) -------------------------------------
+    kv_layout: str = "medusa"     # medusa | crossbar | oracle | fused
+    # --- serving ------------------------------------------------------------------
+    serve_fsdp: bool = False      # shard weights over data axis at inference
+    # --- parallelism ---------------------------------------------------------------
+    sharding_profile: str = "tp_heads"   # tp_heads | sp_seq | moe_cap
+    # --- long-context capability -------------------------------------------------
+    subquadratic: bool = False    # may run long_500k
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def param_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def layer_types(self) -> Tuple[str, ...]:
+        pat = self.block_pattern
+        reps = -(-self.n_layers // len(pat))
+        return tuple((pat * reps)[: self.n_layers])
+
+    # ------------------------------------------------------------------
+    # Analytic parameter / FLOP accounting (used for roofline §Roofline)
+    # ------------------------------------------------------------------
+    def _attn_params(self) -> int:
+        hd = self.resolved_head_dim
+        q = self.d_model * self.n_heads * hd
+        kv = 2 * self.d_model * self.n_kv_heads * hd
+        o = self.n_heads * hd * self.d_model
+        return q + kv + o
+
+    def _mlp_params(self, d_ff: int) -> int:
+        mult = 3 if self.mlp in ("swiglu", "geglu") else 2
+        return mult * self.d_model * d_ff
+
+    def _rglru_params(self) -> int:
+        w = (self.rglru.lru_width or self.d_model) if self.rglru else self.d_model
+        # in/out proj + conv + input & recurrence gates + Λ
+        conv = w * self.rglru.conv_width if self.rglru else 0
+        return 2 * self.d_model * w + conv + 2 * w * w + w
+
+    def _mamba_params(self) -> int:
+        s = self.ssm
+        d_in = s.expand * self.d_model
+        nh = d_in // s.head_dim
+        in_p = self.d_model * (2 * d_in + 2 * s.d_state + nh)
+        conv = s.conv_width * (d_in + 2 * s.d_state)
+        out_p = d_in * self.d_model
+        return in_p + conv + out_p + nh + d_in  # + dt bias, gate norm
+
+    def param_count(self) -> int:
+        """Total parameter count (embeddings included once if tied)."""
+        emb = self.vocab_size * self.d_model * (1 if self.tie_embeddings else 2)
+        total = emb
+        for t in self.layer_types():
+            if t in ("A", "L"):
+                total += self._attn_params()
+            elif t == "R":
+                total += self._rglru_params()
+            elif t == "M":
+                total += self._mamba_params()
+            if t != "M":  # mamba blocks replace attn+mlp in one
+                if self.moe is not None:
+                    total += (self.moe.n_experts * self._mlp_params(self.moe.expert_d_ff)
+                              + self.d_model * self.moe.n_experts)
+                else:
+                    total += self._mlp_params(self.d_ff)
+            total += 2 * self.d_model  # norms
+        if self.encoder_layers:
+            total += self.encoder_layers * (self._attn_params()
+                                            + self._mlp_params(self.d_ff)
+                                            + 2 * self.d_model)
+            # decoder cross-attention
+            total += self.n_layers * (self._attn_params() + self.d_model)
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top-k experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        dense = self.param_count() - sum(
+            self.moe.n_experts * self._mlp_params(self.moe.expert_d_ff)
+            for t in self.layer_types() if t != "M")
+        active = sum(self.moe.top_k * self._mlp_params(self.moe.expert_d_ff)
+                     for t in self.layer_types() if t != "M")
+        return dense + active
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Optimizer / run-level configuration."""
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    grad_clip: float = 1.0
+    zero1: bool = True            # shard optimizer state over data axis
+    grad_accum: int = 0           # microbatches per step; 0 = auto-fit HBM
+    grad_compression: str = "none"  # none | int8
+    checkpoint_every: int = 100
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    seed: int = 0

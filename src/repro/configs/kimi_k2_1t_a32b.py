@@ -1,0 +1,26 @@
+"""Kimi-K2 1T-A32B [arXiv:2501 (paper-table)] — trillion-param MoE.
+
+61 layers, 384 experts top-8, d_ff=2048 per expert, GQA kv=8 per the
+assignment.  384 experts / 16-way model axis = 24 experts per chip (EP);
+heads 64/16 = 4 per chip (TP).  Training state does not fit 512 v5e chips
+(physics — see EXPERIMENTS.md §Dry-run); serving does.
+"""
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8, d_ff=2048,
+    vocab_size=163840, head_dim=128, mlp="swiglu", norm="rms",
+    moe=MoEConfig(n_experts=384, top_k=8, expert_d_ff=2048),
+    rope_theta=50_000.0,
+    sharding_profile="tp_heads", subquadratic=False,
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="kimi-k2-smoke", family="moe",
+        n_layers=3, d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+        vocab_size=256, moe=MoEConfig(n_experts=8, top_k=2, expert_d_ff=32),
+        remat="none")

@@ -1,0 +1,45 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig
+
+ARCHS = {
+    "starcoder2-15b": "repro.configs.starcoder2_15b",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "gemma3-12b": "repro.configs.gemma3_12b",
+    "gemma3-4b": "repro.configs.gemma3_4b",
+    "internvl2-1b": "repro.configs.internvl2_1b",
+    "mamba2-780m": "repro.configs.mamba2_780m",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b_a800m",
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2_1t_a32b",
+    "whisper-medium": "repro.configs.whisper_medium",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(ARCHS)}")
+    return importlib.import_module(ARCHS[arch]).CONFIG
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return importlib.import_module(ARCHS[arch]).smoke()
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def cells():
+    """All (arch, shape) dry-run cells, with documented long_500k skips."""
+    out = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            skip = (shape.name == "long_500k" and not cfg.subquadratic)
+            out.append((arch, shape.name, skip))
+    return out

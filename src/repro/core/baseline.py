@@ -1,0 +1,105 @@
+"""Baseline (traditional) memory interconnect — paper §II.
+
+The baseline read network is a 1-to-N demux feeding N wide shallow FIFOs, each
+followed by an N-to-1 width converter; the write network is the mirror image.
+Its cost is ``W_line x (N-1)`` one-bit 2-to-1 muxes per direction
+(O(Bandwidth x NumPorts), §II-B) and its wide distributed buses are what kill
+FPGA routing at scale (§II-C).
+
+On TPU the analogous over-provisioned structure is *content-flexible routing*:
+gather / one-hot-matmul selection, which materialises index tensors and
+gather/scatter HLO where Medusa emits static roll/select chains.  We implement
+the baseline both ways:
+
+* :func:`read_network_crossbar` / :func:`write_network_crossbar` — gather-based
+  demux + per-port width-converter (``jnp.take`` with an explicit routing
+  index), value-identical to the Medusa network.
+* :func:`width_convert_onehot` — the N-to-1 mux modelled as a one-hot matmul
+  (each output word selects among N candidates), used by the resource
+  benchmarks to census the mux cost in lowered HLO.
+
+Both carry the same request-arbitration semantics as Medusa (§IV: "both
+interconnects use the same request arbitration logic").
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("n_ports",))
+def read_network_crossbar(lines: jax.Array, n_ports: int) -> jax.Array:
+    """Crossbar read network: for every (group, word-addr, port) output slot,
+    gather the source word through an explicit routing index — the wide demux
+    plus per-port N-to-1 width-converter mux of Fig. 1.
+
+    Output layout matches :func:`repro.core.transpose.read_network_medusa`:
+    ``banked[g, y, p] = lines[g*N + p, y]``.
+    """
+    n = n_ports
+    if lines.shape[0] % n or lines.shape[1] != n:
+        raise ValueError(f"bad line stream {lines.shape} for N={n}")
+    groups = lines.shape[0] // n
+    g = jnp.arange(groups)[:, None, None]
+    y = jnp.arange(n)[None, :, None]
+    p = jnp.arange(n)[None, None, :]
+    flat = lines.reshape((groups * n * n,) + lines.shape[2:])
+    # Demux: any of the N*N words of a group may be routed to any output slot
+    # on any cycle — the full-connectivity crossbar (over-provisioned).
+    src = (g * n + p) * n + y
+    return jnp.take(flat, src.reshape(-1), axis=0).reshape(
+        (groups, n, n) + lines.shape[2:])
+
+
+@partial(jax.jit, static_argnames=("n_ports",))
+def write_network_crossbar(banked: jax.Array, n_ports: int) -> jax.Array:
+    """Crossbar write network (Fig. 2): per-port width converters feed wide
+    FIFOs, an N-to-1 mux drains them to the memory controller."""
+    n = n_ports
+    groups = banked.shape[0]
+    l = jnp.arange(groups * n)[:, None]
+    y = jnp.arange(n)[None, :]
+    flat = banked.reshape((groups * n * n,) + banked.shape[3:])
+    # banked[g, y, p] sits at flat[(g*n + y)*n + p]; line l = (g, p=l%n).
+    src = ((l // n) * n + y) * n + (l % n)
+    return jnp.take(flat, src.reshape(-1), axis=0).reshape(
+        (groups * n, n) + banked.shape[3:])
+
+
+@partial(jax.jit, static_argnames=())
+def width_convert_onehot(fifo_line: jax.Array, select: jax.Array) -> jax.Array:
+    """One step of the baseline data-width converter: an N-to-1 word mux.
+
+    ``fifo_line`` is ``[N, W]`` (one wide FIFO entry), ``select`` the word
+    index to present on the narrow port this cycle.  Modelled as a one-hot
+    reduction — N-1 two-to-one muxes of width W, the §II-B cost unit.
+    """
+    n = fifo_line.shape[0]
+    onehot = (jnp.arange(n) == select).astype(fifo_line.dtype)
+    return jnp.tensordot(onehot, fifo_line, axes=(0, 0))
+
+
+def fifo_bram_cost(depth_lines: int, w_line: int, bram_bits: int = 18 * 1024,
+                   bram_width: int = 36) -> int:
+    """BRAM-18K count for one wide shallow FIFO (paper §IV-C accounting).
+
+    A Virtex-7 18-Kbit BRAM is at most 36 bits wide; a ``depth x W_line`` FIFO
+    needs ``ceil(W_line / 36)`` BRAMs regardless of (shallow) depth — e.g. a
+    32 x 512b FIFO consumes 15 BRAMs, so 64 FIFOs would need 960 (§IV-C).
+    """
+    del depth_lines, bram_bits  # depth 32 << 512 never adds BRAMs at 36b width
+    return -(-w_line // bram_width)
+
+
+def medusa_bank_bram_cost(n_ports: int, w_acc: int, max_burst: int,
+                          bram_bits: int = 18 * 1024) -> int:
+    """BRAM-18K count for Medusa's deep-narrow banks: N banks of
+    ``(MaxBurstLen x N) x W_acc`` bits each (input+output double buffer is
+    counted by the caller).  32 banks of 1024 x 16b = 16 Kbit fit one BRAM
+    each → 32 per direction, 64 total (§IV-C)."""
+    bank_bits = max_burst * n_ports * w_acc
+    per_bank = -(-bank_bits // bram_bits)
+    return n_ports * per_bank

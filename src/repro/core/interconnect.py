@@ -1,0 +1,72 @@
+"""High-level interconnect API — the framework-facing entry point.
+
+``Interconnect`` bundles the read/write data-transfer networks behind an
+implementation switch so every consumer in the framework (KV-cache layout
+engine, MoE dispatch, weight streaming) can select:
+
+* ``"medusa"``   — the paper's transposition network (log-stage rolls+selects;
+  Pallas kernel on TPU via :mod:`repro.kernels.ops` when tile shapes allow),
+* ``"crossbar"`` — the traditional gather-based baseline (paper §II),
+* ``"oracle"``   — plain reshape/swapaxes (semantics reference).
+
+All three are value-identical; they differ only in the HLO they emit, which is
+exactly what the paper's resource/frequency comparison becomes on TPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+
+from repro.core import transpose as _t
+from repro.core import baseline as _b
+
+Impl = Literal["medusa", "crossbar", "oracle"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Interconnect:
+    """A W_line ↔ N x W_acc data-transfer network with selectable fabric."""
+
+    n_ports: int
+    impl: Impl = "medusa"
+
+    def read(self, lines: jax.Array) -> jax.Array:
+        """Read network: DRAM line stream ``[L, N, W]`` → banked port buffer
+        ``[G, N(word-addr), N(port-lane), W]``."""
+        if self.impl == "medusa":
+            return _t.read_network_medusa(lines, self.n_ports)
+        if self.impl == "crossbar":
+            return _b.read_network_crossbar(lines, self.n_ports)
+        return _t.read_network_oracle(lines, self.n_ports)
+
+    def write(self, banked: jax.Array) -> jax.Array:
+        """Write network: banked port buffer → DRAM line stream."""
+        if self.impl == "medusa":
+            return _t.write_network_medusa(banked, self.n_ports)
+        if self.impl == "crossbar":
+            return _b.write_network_crossbar(banked, self.n_ports)
+        return _t.write_network_oracle(banked, self.n_ports)
+
+    def swap_minor(self, x: jax.Array) -> jax.Array:
+        """Layout engine: transpose the two minor axes of ``x`` (rectangular
+        OK) — e.g. KV cache [T, H*D-line] ↔ [H, T-stream].  Uses the fabric
+        selected by ``impl``."""
+        if self.impl == "medusa":
+            return _t.medusa_swap_minor(x)
+        if self.impl == "crossbar":
+            # gather-based transpose: explicit index routing (over-provisioned)
+            import jax.numpy as jnp
+            r, c = x.shape[-2], x.shape[-1]
+            i = jax.lax.broadcasted_iota(jnp.int32, x.shape[:-2] + (c, r), x.ndim - 2)
+            j = jax.lax.broadcasted_iota(jnp.int32, x.shape[:-2] + (c, r), x.ndim - 1)
+            flat = x.reshape(x.shape[:-2] + (r * c,))
+            return jnp.take_along_axis(flat, (j * c + i).reshape(x.shape[:-2] + (c * r,)),
+                                       axis=-1).reshape(x.shape[:-2] + (c, r))
+        return _t.transpose_oracle(x, x.ndim - 2, x.ndim - 1)
+
+    @property
+    def latency_cycles(self) -> int:
+        return _t.transposition_latency_cycles(self.n_ports)

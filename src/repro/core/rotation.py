@@ -1,0 +1,116 @@
+"""Barrel rotation unit (paper §III-B) and index-twist networks.
+
+The paper's rotation unit takes N words of W_acc bits and left-rotates them by
+``c mod N`` positions using a barrel-shifter: ``log2(N)`` stages, where stage
+``l`` conditionally rotates by ``2**l`` words under bit ``l`` of the rotation
+amount.  On TPU the analogous primitive is a full-lane roll (`jnp.roll` /
+``pltpu.roll``) composed in the same log-depth structure: each stage is one
+full-width vector move plus a 2-to-1 select — no gathers, no index tensors.
+
+This module provides:
+
+* :func:`barrel_rotate` — the faithful log-stage rotation unit (vectorised over
+  leading dims), equivalent to ``jnp.roll(x, -amount, axis)`` for left rotation.
+* :func:`index_twist` — a row-index-dependent rotation (row ``b`` rotated by
+  ``b * direction``) built from the same barrel structure; this is the
+  "address generator" of the banked buffers, which on FPGA is free addressing
+  and on TPU becomes log2(N) masked rolls.
+* mux-count cost models matching the paper's §II-B / §III-D formulas.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _num_stages(n: int) -> int:
+    if n <= 0 or (n & (n - 1)) != 0:
+        raise ValueError(f"barrel rotation requires power-of-two size, got {n}")
+    return int(math.log2(n))
+
+
+@partial(jax.jit, static_argnames=("axis",))
+def barrel_rotate(x: jax.Array, amount: jax.Array, axis: int = 0) -> jax.Array:
+    """Left-rotate ``x`` along ``axis`` by ``amount`` using log2(N) barrel stages.
+
+    Semantically equal to ``jnp.roll(x, -amount, axis=axis)`` but built from the
+    paper's structure: stage ``l`` rotates by ``2**l`` iff bit ``l`` of
+    ``amount mod N`` is set.  Each stage lowers to a static roll (slice+concat)
+    and a select — the TPU analogue of one mux layer.
+    """
+    n = x.shape[axis]
+    stages = _num_stages(n)
+    amount = jnp.asarray(amount, dtype=jnp.int32) % n
+    for level in range(stages):
+        bit = (amount >> level) & 1
+        rotated = jnp.roll(x, -(1 << level), axis=axis)
+        x = jnp.where(_expand(bit, x.ndim), rotated, x)
+    return x
+
+
+def _expand(scalar: jax.Array, ndim: int) -> jax.Array:
+    return jnp.reshape(scalar.astype(bool), (1,) * ndim)
+
+
+@partial(jax.jit, static_argnames=("axis", "roll_axis", "direction"))
+def index_twist(x: jax.Array, axis: int = 0, roll_axis: int = 1,
+                direction: int = -1) -> jax.Array:
+    """Rotate slice ``b`` (taken along ``axis``) by ``direction * b`` along
+    ``roll_axis``.
+
+    ``direction=-1`` is a left twist: ``out[b, k] = x[b, (k + b) % N]`` (for a
+    2-D input with ``axis=0, roll_axis=1``).  ``direction=+1`` is the inverse
+    right twist.  Implemented as log2(N) stages of (static roll, masked
+    select) — the bank "address generators" of the paper mapped onto the VPU.
+    """
+    n = x.shape[axis]
+    stages = _num_stages(n)
+    idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, axis)
+    for level in range(stages):
+        take_rot = ((idx >> level) & 1).astype(bool)
+        rotated = jnp.roll(x, direction * (1 << level), axis=roll_axis)
+        x = jnp.where(take_rot, rotated, x)
+    return x
+
+
+# ----------------------------------------------------------------------------
+# Logic-complexity cost models (paper §II-B and §III-D)
+# ----------------------------------------------------------------------------
+
+def baseline_mux_count(w_line: int, num_ports: int) -> int:
+    """2-to-1 one-bit mux count of the baseline data-transfer network.
+
+    Paper §II-B: each of the N width converters performs an N-to-1 mux of
+    width ``W_acc = W_line / N`` → ``W_acc × (N-1)`` muxes each, so the total
+    is ``W_line × (N-1)``: O(Bandwidth × NumPorts).
+    """
+    return w_line * (num_ports - 1)
+
+
+def medusa_mux_count(w_line: int, num_ports: int) -> int:
+    """2-to-1 one-bit mux count of the Medusa rotation unit.
+
+    Paper §III-D: log2(N) layers, each layer N muxes of width W_acc =
+    ``W_line`` one-bit muxes per layer → ``W_line × log2(N)`` total.
+    """
+    return w_line * _num_stages(num_ports)
+
+
+def mux_reduction(w_line: int, num_ports: int) -> float:
+    """Baseline/Medusa mux ratio — the paper's headline complexity win."""
+    return baseline_mux_count(w_line, num_ports) / medusa_mux_count(w_line, num_ports)
+
+
+def rotation_depth(num_ports: int) -> int:
+    """Logic depth (levels of 2-to-1 muxes) through the rotation unit.
+
+    The FPGA critical path through the rotation unit is log2(N) mux levels;
+    the baseline's N-to-1 mux is also log-depth in a balanced tree but its
+    *wiring* is O(N) fan-in per port.  We use depth as the frequency-analogue
+    term in the scalability benchmark.
+    """
+    return _num_stages(num_ports)

@@ -1,0 +1,222 @@
+"""Medusa transposition unit (paper §III-A) — faithful model + TPU-native form.
+
+Two implementations of the same semantics live here:
+
+1. :func:`medusa_transpose_cycle_accurate` — the paper's pipeline, cycle by
+   cycle: at cycle ``c`` read the diagonal ``(i, (c+i) mod N)`` from the banked
+   input buffer (one word per bank — conflict-free), left-rotate by ``c`` with
+   the barrel unit, and store into output bank ``j`` at address ``(j+c) mod N``.
+   After exactly N cycles the output banks hold the transpose.  This model is
+   used for semantics/latency/interference validation, mirroring Fig. 4.
+
+2. :func:`medusa_transpose` — the TPU-native production form: a binary-exchange
+   (Eklundh) network with ``log2(N)`` stages.  Stage ``l`` exchanges bit ``l``
+   between the row and column index using two static double-rolls and a
+   2-to-1 select.  Per line of N words this costs ``W_line x log2(N)`` one-bit
+   2-to-1 selects — *exactly* the paper's Medusa mux count (§III-D) — versus a
+   gather/crossbar's ``W_line x (N-1)`` (§II-B).  No gathers, no index
+   tensors: every stage lowers to slice+concat+select, the VPU analogue of a
+   barrel-shifter layer.
+
+Coordinate convention (matches Fig. 4): the input buffer is a matrix
+``I[bank, addr]`` where word ``(x=port, y=index-within-line)`` sits in bank
+``y`` at address ``x``; the output buffer is ``O[bank=port, addr=index]``.
+Thus ``O = I.T`` over the (bank, addr) physical coordinates — bank index is
+the lane (minor) dimension on TPU, address the sublane dimension.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rotation import barrel_rotate, _num_stages
+
+
+# ----------------------------------------------------------------------------
+# 1. Faithful cycle-accurate pipeline (paper Fig. 4)
+# ----------------------------------------------------------------------------
+
+def medusa_transpose_cycle_accurate(input_banks: jax.Array,
+                                    return_trace: bool = False):
+    """Run the N-cycle transposition pipeline on ``input_banks`` [N, N, W].
+
+    ``input_banks[b, a]`` is the word at address ``a`` of bank ``b``; with the
+    paper's placement that is word ``(x=a, y=b)``.  Returns output banks
+    ``O[b, a]`` = word ``(x=b, y=a)``, i.e. the (bank, addr) transpose, plus —
+    optionally — the per-cycle trace of (diagonal, rotated, partial output)
+    used by the latency/interference tests.
+    """
+    n = input_banks.shape[0]
+    if input_banks.shape[1] != n:
+        raise ValueError("cycle-accurate unit operates on square [N, N, ...] tiles")
+    out = jnp.zeros_like(input_banks)
+    banks = jnp.arange(n)
+    trace = []
+    for c in range(n):
+        # Diagonal read: bank b supplies address (b - c) mod N → word ((b-c)%N, b).
+        diag = input_banks[banks, (banks - c) % n]            # [N, W...]
+        # Barrel rotation: left-rotate by c (paper §III-B).
+        rot = barrel_rotate(diag, jnp.int32(c), axis=0)
+        # Transposed store: bank j writes address (j + c) mod N.
+        out = out.at[banks, (banks + c) % n].set(rot)
+        if return_trace:
+            trace.append((diag, rot, out))
+    return (out, trace) if return_trace else out
+
+
+def transposition_latency_cycles(n_ports: int) -> int:
+    """Constant latency overhead of the unit (paper §III-E): N = W_line/W_acc."""
+    return n_ports
+
+
+# ----------------------------------------------------------------------------
+# 2. TPU-native log-stage transposition (production path)
+# ----------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("axis0", "axis1"))
+def medusa_transpose(x: jax.Array, axis0: int = 0, axis1: int = 1) -> jax.Array:
+    """Transpose the two (equal, power-of-two) axes of ``x`` with a
+    binary-exchange network: log2(N) stages of static double-rolls + selects.
+
+    Stage ``l`` (block size ``s = 2**l``) swaps bit ``l`` between the two
+    indices: elements with ``bit_l(i) != bit_l(j)`` exchange along the block
+    anti-diagonal, realised as ``roll(±s, axis0) ∘ roll(∓s, axis1)`` plus a
+    three-way select on iota masks.  Equivalent to ``jnp.swapaxes`` but lowers
+    to roll/select chains (the barrel-shifter analogue) instead of a transpose
+    or gather — this is the kernel-level trick Medusa brings to the VPU.
+    """
+    n = x.shape[axis0]
+    if x.shape[axis1] != n:
+        raise ValueError(
+            f"medusa_transpose needs square axes, got {x.shape[axis0]} x {x.shape[axis1]}")
+    stages = _num_stages(n)
+    row = jax.lax.broadcasted_iota(jnp.int32, x.shape, axis0)
+    col = jax.lax.broadcasted_iota(jnp.int32, x.shape, axis1)
+    for level in range(stages):
+        s = 1 << level
+        rbit = (row >> level) & 1
+        cbit = (col >> level) & 1
+        # Element arriving at (i, j) with bits (1, 0) comes from (i-s, j+s);
+        # with bits (0, 1) it comes from (i+s, j-s); otherwise it stays.
+        from_down = jnp.roll(jnp.roll(x, s, axis=axis0), -s, axis=axis1)
+        from_up = jnp.roll(jnp.roll(x, -s, axis=axis0), s, axis=axis1)
+        x = jnp.where((rbit == 1) & (cbit == 0), from_down,
+                      jnp.where((rbit == 0) & (cbit == 1), from_up, x))
+    return x
+
+
+# ----------------------------------------------------------------------------
+# 3. Line-stream <-> banked port-stream conversion (the interconnect data path)
+# ----------------------------------------------------------------------------
+#
+# Round-robin arbitration (paper §I obs. 1: even static partition) delivers
+# line ``l`` to port ``l % N``.  A group of N consecutive lines forms a square
+# tile ``[N(line=addr), N(word=lane)]``; the read network's physical job is to
+# re-bank it so each port owns a deep-narrow bank: ``[N(word=addr),
+# N(port=lane)]``.  That is one (sublane, lane) transpose per tile — done by
+# the log-stage exchange network.  The group axis is a major relabel (free).
+
+def _check_line_stream(lines: jax.Array, n_ports: int) -> None:
+    if lines.ndim < 2:
+        raise ValueError("line stream must be [num_lines, n_words, ...]")
+    if lines.shape[0] % n_ports != 0:
+        raise ValueError(
+            f"num_lines={lines.shape[0]} must be a multiple of n_ports={n_ports}")
+    if lines.shape[1] != n_ports:
+        raise ValueError(
+            f"each line carries W_line = N x W_acc: expected {n_ports} words, "
+            f"got {lines.shape[1]}")
+
+
+@partial(jax.jit, static_argnames=("n_ports",))
+def read_network_medusa(lines: jax.Array, n_ports: int) -> jax.Array:
+    """Read network: line stream ``[L, N, W]`` → banked ``[G, N, N, W]`` where
+    ``banked[g, y, p] = lines[g*N + p, y]`` (addr=word-index, lane=port)."""
+    n = n_ports
+    _check_line_stream(lines, n)
+    groups = lines.shape[0] // n
+    tiles = lines.reshape((groups, n, n) + lines.shape[2:])
+    return medusa_transpose(tiles, axis0=1, axis1=2)
+
+
+@partial(jax.jit, static_argnames=("n_ports",))
+def write_network_medusa(banked: jax.Array, n_ports: int) -> jax.Array:
+    """Write network (paper §III-A-2): banked ``[G, N, N, W]`` → lines
+    ``[G*N, N, W]`` — the inverse transposition, data flowing to DRAM."""
+    n = n_ports
+    if banked.shape[1] != n or banked.shape[2] != n:
+        raise ValueError(f"expected [G, N, N, ...] banked buffer, got {banked.shape}")
+    tiles = medusa_transpose(banked, axis0=1, axis1=2)
+    return tiles.reshape((tiles.shape[0] * n, n) + tiles.shape[3:])
+
+
+def read_network_oracle(lines: jax.Array, n_ports: int) -> jax.Array:
+    """Pure-jnp oracle for the read network (reshape + swapaxes)."""
+    n = n_ports
+    _check_line_stream(lines, n)
+    groups = lines.shape[0] // n
+    tiles = lines.reshape((groups, n, n) + lines.shape[2:])
+    return jnp.swapaxes(tiles, 1, 2)
+
+
+def write_network_oracle(banked: jax.Array, n_ports: int) -> jax.Array:
+    n = n_ports
+    tiles = jnp.swapaxes(banked, 1, 2)
+    return tiles.reshape((tiles.shape[0] * n, n) + tiles.shape[3:])
+
+
+def port_stream(banked: jax.Array, port: int) -> jax.Array:
+    """Consumer view: port ``p`` reads its own deep-narrow bank (lane column)."""
+    return banked[..., port, :] if banked.ndim >= 4 else banked[..., port]
+
+
+def port_major_view(banked: jax.Array) -> jax.Array:
+    """Logical ``[N_port, G, N_word, W]`` view of the banked buffer (for
+    consumers that want a per-port leading axis; a relabel of the same data)."""
+    return jnp.moveaxis(banked, 2, 0)
+
+
+def transpose_oracle(x: jax.Array, axis0: int = 0, axis1: int = 1) -> jax.Array:
+    return jnp.swapaxes(x, axis0, axis1)
+
+
+# ----------------------------------------------------------------------------
+# 4. Rectangular layout conversion built from square tiles
+# ----------------------------------------------------------------------------
+
+def _pow2_at_most(n: int) -> int:
+    return 1 << int(math.floor(math.log2(n)))
+
+
+@partial(jax.jit, static_argnames=("tile",))
+def medusa_swap_minor(x: jax.Array, tile: int = 0) -> jax.Array:
+    """Transpose the last two axes of ``x`` (any rectangular shape) using the
+    log-stage network on square power-of-two tiles.
+
+    Rows/cols are padded up to a multiple of the tile; the tile grid transpose
+    is a major-dim relabel, each tile transposes through the exchange network.
+    This is the building block behind the KV-cache layout engine
+    ([T, H, D] ↔ [H, T, D]) and the reference semantics for the Pallas kernel.
+    """
+    r, c = x.shape[-2], x.shape[-1]
+    if tile == 0:
+        tile = min(_pow2_at_most(max(r, 1)), _pow2_at_most(max(c, 1)), 128)
+        tile = max(tile, 1)
+    pr = (-r) % tile
+    pc = (-c) % tile
+    if pr or pc:
+        pad = [(0, 0)] * (x.ndim - 2) + [(0, pr), (0, pc)]
+        x = jnp.pad(x, pad)
+    rr, cc = x.shape[-2], x.shape[-1]
+    lead = x.shape[:-2]
+    g = x.reshape(lead + (rr // tile, tile, cc // tile, tile))
+    g = jnp.swapaxes(g, -3, -2)                 # [.., R, C, tile, tile] grid-major
+    g = medusa_transpose(g, axis0=g.ndim - 2, axis1=g.ndim - 1)
+    g = jnp.swapaxes(g, -4, -3)                 # transpose the (major) tile grid
+    g = jnp.swapaxes(g, -3, -2)
+    out = g.reshape(lead + (cc, rr))
+    return out[..., :c, :r]

@@ -1,0 +1,95 @@
+"""Deterministic synthetic data pipeline.
+
+Tokens are drawn from a fixed random **bigram chain** (per-seed transition
+table), so the stream has learnable structure — examples demonstrably reduce
+loss — while remaining fully deterministic and *resumable from any step*
+(generation is a pure function of (seed, step, host)).  In a multi-host
+deployment each host generates only its shard: ``host_id``/``num_hosts``
+partition the global batch, so there is no data redistribution at scale.
+
+Modality stubs (assignment): VLM configs get deterministic ``patch_embeds``,
+audio configs get ``frames`` — the precomputed frontend outputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    cfg: ModelConfig
+    batch: int                      # per-host batch
+    seq: int
+    seed: int = 0
+    host_id: int = 0
+    num_hosts: int = 1
+    branching: int = 4              # bigram fan-out (lower = easier task)
+    vocab_limit: int = 0            # draw tokens from [0, limit) (0 = full
+                                    # vocab); small limits make the chain
+                                    # learnable in few steps (examples/tests)
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        v = self.vocab_limit or self.cfg.vocab_size
+        self._v = v
+        # fixed bigram table: each token transitions to `branching` successors
+        self._table = rng.randint(0, v, size=(v, self.branching))
+
+    def batch_at(self, step: int) -> dict:
+        """The batch for a given global step (pure function — resumable)."""
+        rng = np.random.RandomState(
+            (self.seed * 1_000_003 + step) * 31 + self.host_id)
+        v = self._v
+        b, s = self.batch, self.seq
+        toks = np.empty((b, s + 1), np.int32)
+        toks[:, 0] = rng.randint(0, v, size=b)
+        choices = rng.randint(0, self.branching, size=(b, s))
+        for t in range(s):
+            toks[:, t + 1] = self._table[toks[:, t], choices[:, t]]
+        out = {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+        if self.cfg.n_patches:
+            # VLM: n_patches stub patch embeddings + (s - n_patches) text
+            # tokens; loss is over text positions (api.loss_fn slices).
+            text = s - self.cfg.n_patches
+            out["patch_embeds"] = rng.randn(
+                b, self.cfg.n_patches, self.cfg.d_model).astype(np.float32)
+            out["tokens"] = toks[:, :text]
+            out["targets"] = toks[:, 1:text + 1]
+        if self.cfg.family == "audio":
+            out["frames"] = rng.randn(
+                b, self.cfg.encoder_seq, self.cfg.d_model).astype(np.float32)
+        return out
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def make_batch_specs(cfg: ModelConfig, batch: int, seq: int,
+                     kind: str = "train"):
+    """ShapeDtypeStruct stand-ins for every model input of a step (the
+    pattern used by the dry-run: weak-type-correct, no allocation)."""
+    import jax
+    import jax.numpy as jnp
+    text = seq - (cfg.n_patches or 0) if kind != "decode" else seq
+    specs = {}
+    if kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, text), jnp.int32)
+        specs["targets"] = jax.ShapeDtypeStruct((batch, text), jnp.int32)
+    elif kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, text), jnp.int32)
+    if cfg.n_patches and kind != "decode":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_patches, cfg.d_model), jnp.float32)
+    if cfg.family == "audio" and kind != "decode":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return specs

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: Medusa transposition unit on VMEM tiles.
+
+The paper's transposition unit moves a ``W_line``-bit line per cycle between
+lane-banked and port-banked layouts using a barrel rotator instead of a
+crossbar.  On TPU the equivalent hot spot is the (sublane, lane) transpose of
+VMEM tiles in the layout-conversion path (KV cache line-major → head-major,
+banked weight streams, interconnect re-banking).  This kernel performs it with
+the binary-exchange network: ``log2(T)`` stages, each one *static* roll (a
+full-width vector move — the VPU analogue of a barrel-shifter layer) plus a
+2-to-1 select on iota masks.  No gathers and no index tensors are emitted,
+which is exactly the resource contrast the paper draws against crossbars.
+
+Layout contract: operands are ``[R, C, W]`` with payload ``W`` innermost
+(lanes; use W multiple of 128 on hardware) and the transposed pair in the two
+leading dims (sublanes).  Grid tiles are square ``T x T`` with ``T`` a power
+of two; block (i, j) of the input writes block (j, i) of the output — the tile
+*grid* transpose is free (BlockSpec index maps), the intra-tile movement is
+the exchange network.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _exchange_network(tile: jax.Array) -> jax.Array:
+    """log2(T)-stage binary-exchange transpose of ``tile [T, T, W]``."""
+    t = tile.shape[0]
+    stages = int(math.log2(t))
+    row = jax.lax.broadcasted_iota(jnp.int32, tile.shape, 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, tile.shape, 1)
+    for level in range(stages):
+        s = 1 << level
+        rbit = (row >> level) & 1
+        cbit = (col >> level) & 1
+        from_down = jnp.roll(jnp.roll(tile, s, axis=0), -s, axis=1)
+        from_up = jnp.roll(jnp.roll(tile, -s, axis=0), s, axis=1)
+        tile = jnp.where((rbit == 1) & (cbit == 0), from_down,
+                         jnp.where((rbit == 0) & (cbit == 1), from_up, tile))
+    return tile
+
+
+def _transpose_kernel(x_ref, o_ref):
+    o_ref[...] = _exchange_network(x_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def medusa_transpose_tiles(x: jax.Array, tile: int = 8,
+                           interpret: bool = True) -> jax.Array:
+    """Transpose the two leading axes of ``x [R, C, W]`` → ``[C, R, W]``.
+
+    ``R`` and ``C`` must be multiples of ``tile`` (a power of two); ``ops.py``
+    wraps this with padding for arbitrary shapes.  ``W`` rides along in lanes.
+    On hardware use ``tile`` >= the sublane count for the dtype and ``W`` a
+    multiple of 128; ``interpret=True`` runs the same kernel body on CPU.
+    """
+    r, c, w = x.shape
+    if r % tile or c % tile:
+        raise ValueError(f"R={r}, C={c} must be multiples of tile={tile}")
+    if tile & (tile - 1):
+        raise ValueError(f"tile must be a power of two, got {tile}")
+    grid = (r // tile, c // tile)
+    return pl.pallas_call(
+        _transpose_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile, tile, w), lambda i, j: (i, j, 0))],
+        out_specs=pl.BlockSpec((tile, tile, w), lambda i, j: (j, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, r, w), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def _exchange_network_nd(tile: jax.Array, a0: int, a1: int) -> jax.Array:
+    """Exchange network over an arbitrary axis pair (payload elsewhere)."""
+    t = tile.shape[a0]
+    stages = int(math.log2(t))
+    row = jax.lax.broadcasted_iota(jnp.int32, tile.shape, a0)
+    col = jax.lax.broadcasted_iota(jnp.int32, tile.shape, a1)
+    for level in range(stages):
+        s = 1 << level
+        rbit = (row >> level) & 1
+        cbit = (col >> level) & 1
+        from_down = jnp.roll(jnp.roll(tile, s, axis=a0), -s, axis=a1)
+        from_up = jnp.roll(jnp.roll(tile, -s, axis=a0), s, axis=a1)
+        tile = jnp.where((rbit == 1) & (cbit == 0), from_down,
+                         jnp.where((rbit == 0) & (cbit == 1), from_up, tile))
+    return tile
+
+
+def _rebank_kernel(x_ref, o_ref):
+    # One interconnect group per grid step: [1, N(line=port), N(word), W] →
+    # banked [1, N(word-addr), N(port-lane), W] — the §III-A read transposition.
+    o_ref[...] = _exchange_network_nd(x_ref[...], 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("n_ports", "interpret"))
+def read_network_tiles(lines: jax.Array, n_ports: int,
+                       interpret: bool = True) -> jax.Array:
+    """Kernel form of :func:`repro.core.transpose.read_network_medusa`:
+    ``lines [L, N, W]`` → banked ``[G, N, N, W]``; one group tile per grid
+    step, double-buffered by the Pallas pipeline (the paper's prefetch)."""
+    n = n_ports
+    l, n_words, w = lines.shape
+    if n_words != n or l % n:
+        raise ValueError(f"bad line stream {lines.shape} for N={n}")
+    groups = l // n
+    x = lines.reshape(groups, n, n, w)
+    return pl.pallas_call(
+        _rebank_kernel,
+        grid=(groups,),
+        in_specs=[pl.BlockSpec((1, n, n, w), lambda g: (g, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, n, n, w), lambda g: (g, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((groups, n, n, w), lines.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,100 @@
+"""Public, jit-friendly wrappers around the Pallas kernels.
+
+These are what the framework calls.  Every op:
+
+* validates/pads shapes to kernel tile requirements,
+* dispatches to the Pallas kernel (``interpret=True`` on CPU — the kernel
+  body is identical on TPU, where ``interpret=False`` is used),
+* has a pure-jnp oracle in :mod:`repro.kernels.ref` which tests sweep against.
+
+``use_kernels(False)`` (or the ``REPRO_NO_KERNELS`` env var) routes every op
+to its oracle — used by the dry-run, where we want the XLA-native HLO of the
+surrounding program rather than interpret-mode custom calls.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.medusa_transpose import (medusa_transpose_tiles,
+                                            read_network_tiles)
+from repro.kernels.rotator import barrel_rotate_groups
+from repro.kernels.stream_matmul import stream_matmul
+
+_USE_KERNELS = os.environ.get("REPRO_NO_KERNELS", "") == ""
+
+
+def use_kernels(enabled: bool) -> None:
+    """Globally route ops to Pallas kernels (True) or jnp oracles (False)."""
+    global _USE_KERNELS
+    _USE_KERNELS = enabled
+
+
+def kernels_enabled() -> bool:
+    return _USE_KERNELS
+
+
+def _pow2_floor(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+def transpose_rc(x: jax.Array, tile: int = 0) -> jax.Array:
+    """Swap the two leading axes of ``x [R, C, W]`` → ``[C, R, W]`` via the
+    Medusa exchange-network kernel (padding to square power-of-two tiles)."""
+    if not _USE_KERNELS:
+        return ref.transpose_ref(x)
+    r, c, w = x.shape
+    if tile == 0:
+        tile = min(_pow2_floor(max(r, 1)), _pow2_floor(max(c, 1)), 64)
+    pr, pc = (-r) % tile, (-c) % tile
+    xp = jnp.pad(x, ((0, pr), (0, pc), (0, 0))) if (pr or pc) else x
+    out = medusa_transpose_tiles(xp, tile=tile)
+    return out[:c, :r]
+
+
+def kv_line_to_port(kv: jax.Array) -> jax.Array:
+    """KV-cache layout engine: line-major ``[T, H, D]`` (one timestep = one
+    wide line across heads) → port-major ``[H, T, D]`` (one stream per head).
+    This is the production read-network application (DESIGN.md §3.1)."""
+    if not _USE_KERNELS:
+        return ref.kv_layout_ref(kv)
+    return transpose_rc(kv)
+
+
+def interconnect_read(lines: jax.Array, n_ports: int) -> jax.Array:
+    """Banked read network on tiles (kernel form of core.read_network_medusa)."""
+    if not _USE_KERNELS:
+        from repro.core.transpose import read_network_oracle
+        return read_network_oracle(lines, n_ports)
+    return read_network_tiles(lines, n_ports)
+
+
+def rotate_groups(x: jax.Array, amounts: jax.Array) -> jax.Array:
+    """Barrel-rotate each ``x[g] [N, W]`` left by ``amounts[g]``."""
+    if not _USE_KERNELS:
+        return jax.vmap(ref.rotate_ref)(x, amounts)
+    return barrel_rotate_groups(x, amounts)
+
+
+def matmul(x: jax.Array, w: jax.Array, bm: int = 0, bn: int = 0,
+           bk: int = 0) -> jax.Array:
+    """Streaming double-buffered matmul; falls back to the oracle when shapes
+    do not tile cleanly (kernels are for the aligned hot path)."""
+    if not _USE_KERNELS:
+        return ref.matmul_ref(x, w)
+    m, k = x.shape
+    _, n = w.shape
+    bm = bm or min(128, _pow2_floor(m))
+    bn = bn or min(128, _pow2_floor(n))
+    bk = bk or min(128, _pow2_floor(k))
+    if m % bm or n % bn or k % bk:
+        return ref.matmul_ref(x, w)
+    return stream_matmul(x, w, bm=bm, bn=bn, bk=bk)

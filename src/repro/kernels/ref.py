@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are validated against
+(tests sweep shapes/dtypes and ``assert_allclose`` kernel vs. oracle).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def transpose_ref(x: jax.Array) -> jax.Array:
+    """Oracle for ``medusa_transpose`` kernels: swap the two leading axes of a
+    ``[R, C, W]`` (payload-trailing) array."""
+    return jnp.swapaxes(x, 0, 1)
+
+
+def rotate_ref(x: jax.Array, amount: jax.Array | int) -> jax.Array:
+    """Oracle for the barrel rotator: left rotation along axis 0."""
+    return jnp.roll(x, -jnp.asarray(amount), axis=0)
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Oracle for the streaming matmul (fp32 accumulation)."""
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)).astype(x.dtype)
+
+
+def kv_layout_ref(kv: jax.Array) -> jax.Array:
+    """Oracle for the KV-cache layout engine: line-major ``[T, H, D]`` →
+    port-major ``[H, T, D]``."""
+    return jnp.swapaxes(kv, 0, 1)

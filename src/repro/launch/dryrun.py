@@ -1,0 +1,177 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count on first init, and the production meshes below need 512 host devices.
+os.environ.setdefault("REPRO_NO_KERNELS", "1")   # dry-run lowers XLA-native HLO
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input-shape) cell and both production meshes
+(single-pod 16x16 = 256 chips, multi-pod 2x16x16 = 512 chips), lower and
+compile the appropriate step (train_step / prefill / serve_step) from
+ShapeDtypeStruct stand-ins — no allocation — then record:
+
+* ``compiled.memory_analysis()``  (per-device bytes — proves it fits),
+* ``compiled.cost_analysis()``    (XLA's own numbers, loop bodies counted 1x),
+* trip-count-corrected FLOPs / HBM bytes / collective bytes from our HLO
+  parse (`hlo_analysis.analyze_hlo`),
+* the three roofline terms + dominant bottleneck (§Roofline),
+* MODEL_FLOPS = 6·N·D (train) and the useful-compute ratio.
+
+Results are cached as JSON per cell under ``results/dryrun`` so the sweep is
+resumable; failures are recorded with tracebacks (a failure here is a bug in
+the system, per the assignment).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+      [--mesh single|multi|both] [--force] [--list]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import (make_production_mesh, PEAK_FLOPS_BF16, HBM_BW,
+                               ICI_BW)
+from repro.launch.hlo_analysis import analyze_hlo, model_flops, roofline_terms
+from repro.launch.steps import build_step
+
+RESULTS_DIR = os.environ.get(
+    "REPRO_RESULTS_DIR",
+    os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                 "results", "dryrun"))
+
+
+def cell_config(arch: str, shape_name: str) -> ModelConfig:
+    """Per-cell config adjustments (documented in DESIGN.md §7):
+    long_500k always runs sequence-parallel so the KV/state shards."""
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and cfg.sharding_profile == "tp_heads":
+        cfg = dataclasses.replace(cfg, sharding_profile="sp_seq")
+    return cfg
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: dict | None = None) -> dict:
+    cfg = cell_config(arch, shape_name)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    with mesh:
+        built = build_step(cfg, shape, mesh)
+        jitted = jax.jit(built.fn,
+                         in_shardings=built.in_shardings,
+                         out_shardings=built.out_shardings,
+                         donate_argnums=built.donate_argnums)
+        lowered = jitted.lower(*built.input_specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    costs = analyze_hlo(compiled.as_text())
+    roof = roofline_terms(costs, chips, PEAK_FLOPS_BF16, HBM_BW, ICI_BW)
+    mf = model_flops(cfg, shape)
+    hlo_total_flops = costs.flops * chips
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "status": "ok",
+        "sharding_profile": cfg.sharding_profile,
+        "memory": {
+            "bytes_per_device": getattr(mem, "temp_size_in_bytes", 0)
+                                 + getattr(mem, "argument_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "xla_cost_analysis": {k: cost.get(k) for k in
+                              ("flops", "bytes accessed", "transcendentals")},
+        "parsed": costs.as_dict(),
+        "roofline": roof,
+        "model_flops": mf,
+        "useful_compute_ratio": (mf / hlo_total_flops
+                                 if hlo_total_flops else None),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    }
+    return result
+
+
+def cell_path(arch, shape_name, multi_pod):
+    mesh = "multi" if multi_pod else "single"
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape_name}__{mesh}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    todo, done, skipped = [], 0, 0
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            if shape_name == "long_500k" and not cfg.subquadratic:
+                skipped += 1
+                continue
+            for mp in meshes:
+                path = cell_path(arch, shape_name, mp)
+                if os.path.exists(path) and not args.force:
+                    with open(path) as f:
+                        if json.load(f).get("status") == "ok":
+                            done += 1
+                            continue
+                todo.append((arch, shape_name, mp))
+
+    print(f"dry-run: {len(todo)} to run, {done} cached, "
+          f"{skipped} long_500k skips (full-attention archs)")
+    if args.list:
+        for t in todo:
+            print("  ", t)
+        return
+
+    for i, (arch, shape_name, mp) in enumerate(todo):
+        tag = f"{arch} x {shape_name} x {'2x16x16' if mp else '16x16'}"
+        print(f"[{i+1}/{len(todo)}] {tag} ...", flush=True)
+        try:
+            res = run_cell(arch, shape_name, mp)
+            r = res["roofline"]
+            print(f"    ok: compute={r['compute_s']:.3e}s "
+                  f"memory={r['memory_s']:.3e}s coll={r['collective_s']:.3e}s "
+                  f"dominant={r['dominant']} "
+                  f"mem/dev={res['memory']['peak_bytes'] or 0:.3e}B "
+                  f"(lower {res['lower_s']}s compile {res['compile_s']}s)",
+                  flush=True)
+        except Exception as e:  # record failures — they are system bugs
+            res = {"arch": arch, "shape": shape_name,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "status": "error", "error": repr(e),
+                   "traceback": traceback.format_exc()}
+            print(f"    ERROR: {e!r}", flush=True)
+        with open(cell_path(arch, shape_name, mp), "w") as f:
+            json.dump(res, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

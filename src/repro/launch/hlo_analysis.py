@@ -1,0 +1,417 @@
+"""Trip-count-corrected HLO cost model for the roofline analysis.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE (verified in this
+environment: an 8-step scan of a 128³ matmul reports 2·128³ flops, not 8×).
+Since every model here scans over layers, we parse ``compiled.as_text()``
+ourselves:
+
+* computations are walked from ENTRY; a ``while`` body's costs are multiplied
+  by its trip count, recovered from the loop condition's ``compare`` against a
+  constant (scan always lowers to that form); nesting multiplies.
+* FLOPs: ``dot`` ops contribute ``2 x prod(result_dims) x prod(contracted)``
+  (contracted dims parsed from ``lhs_contracting_dims``); ``dot`` inside
+  fusion bodies is charged at the call-site multiplier.
+* HBM bytes: fusion boundaries are materialisation boundaries, so every
+  top-level op (excluding parameter/constant/tuple plumbing/bitcast)
+  contributes operand+result bytes x multiplier.
+* collective bytes: for all-gather / all-reduce / reduce-scatter / all-to-all
+  / collective-permute ops, the payload is ``max(operand bytes, result
+  bytes)`` x multiplier (ring-algorithm factors are NOT applied — documented
+  choice; the roofline divides by one link's bandwidth as the conservative
+  single-link model).
+
+The same parse records the collective op census (op kind → count, bytes) used
+by EXPERIMENTS.md §Dry-run and the interconnect benchmarks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _line_shapes(segment: str):
+    return [(m.group(1), m.group(2)) for m in _SHAPE_RE.finditer(segment)]
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_census: Dict[str, list] = dataclasses.field(
+        default_factory=lambda: defaultdict(lambda: [0, 0.0]))
+    while_trip_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "collective_bytes": self.collective_bytes,
+            "collectives": {k: {"count": v[0], "bytes": v[1]}
+                            for k, v in self.collective_census.items()},
+            "while_trip_counts": self.while_trip_counts,
+        }
+
+
+def parse_computations(hlo_text: str) -> Dict[str, list]:
+    comps: Dict[str, list] = {}
+    cur = None
+    entry = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        rline = line.rstrip()
+        # computation header: [ENTRY] %name (args...) -> type {
+        if rline.endswith("{") and "->" in rline and not line.startswith(" "):
+            head = rline.lstrip()
+            is_entry = head.startswith("ENTRY")
+            if is_entry:
+                head = head[len("ENTRY"):].lstrip()
+            name = head.split("(", 1)[0].strip().lstrip("%").strip()
+            if name:
+                cur = name
+                comps[cur] = []
+                if is_entry:
+                    entry = cur
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None and "=" in stripped and stripped.startswith(("%", "ROOT")):
+            comps[cur].append(stripped)
+    comps["__entry__"] = [entry]
+    return comps
+
+
+def _trip_count(cond_lines: list) -> int:
+    """Recover the scan trip count from the loop condition: a compare of the
+    induction variable against a constant."""
+    consts = {}
+    for ln in cond_lines:
+        m = re.match(r"%?([\w\.\-]+)\s*=\s*\w+\[\]\s*constant\((\-?\d+)\)", ln)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for ln in cond_lines:
+        if " compare(" not in ln:
+            continue
+        m = re.search(r"compare\(([^)]*)\)", ln)
+        args = [a.strip().lstrip("%").split(" ")[-1].lstrip("%")
+                for a in m.group(1).split(",")] if m else []
+        dirn = re.search(r"direction=(\w+)", ln)
+        for a in args:
+            if a in consts:
+                c = consts[a]
+                if dirn and dirn.group(1) == "LT":
+                    return max(c, 1)
+                if dirn and dirn.group(1) in ("LE",):
+                    return max(c + 1, 1)
+                return max(c, 1)
+        # compare against inline constant: compare(%x, s32[] constant(8))
+        m2 = re.search(r"constant\((\d+)\)", ln)
+        if m2:
+            return max(int(m2.group(1)), 1)
+    return 1
+
+
+_NAME_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _result_name(line: str) -> Optional[str]:
+    m = _NAME_RE.match(line)
+    return m.group(1) if m else None
+
+
+_OPCODE_RE = re.compile(r"\b([a-z][\w\-]*)\(")
+
+
+def _split_op(line: str):
+    """→ (result-type region, opcode, operand region) of an HLO op line.
+    The opcode is the first lowercase word directly followed by '(' — type
+    tokens use brackets, tuple-result parens are not word-adjacent."""
+    rhs = line.split("=", 1)[1]
+    m = _OPCODE_RE.search(rhs)
+    if not m:
+        return rhs, "", ""
+    operands = rhs[m.end():].split(")", 1)[0]
+    return rhs[: m.start()], m.group(1), operands
+
+
+def _result_shapes(line: str):
+    """Shape tokens of the op result (the typed region before the opcode)."""
+    res, _, _ = _split_op(line)
+    return _line_shapes(res)
+
+
+def _operand_names(line: str):
+    _, _, operands = _split_op(line)
+    return _OPERAND_RE.findall(operands)
+
+
+def _symtab(lines) -> Dict[str, int]:
+    """name → result bytes, from each op's typed result."""
+    tab: Dict[str, int] = {}
+    for ln in lines:
+        name = _result_name(ln)
+        if name:
+            tab[name] = sum(_shape_bytes(dt, dims)
+                            for dt, dims in _result_shapes(ln))
+    return tab
+
+
+def _symtab_dims(lines) -> Dict[str, list]:
+    """name → result dims (first shape token only), for dot contraction."""
+    tab: Dict[str, list] = {}
+    for ln in lines:
+        name = _result_name(ln)
+        if name:
+            shapes = _result_shapes(ln)
+            if shapes:
+                tab[name] = [int(d) for d in shapes[0][1].split(",") if d]
+    return tab
+
+
+def _dot_flops(line: str, dims_tab: Dict[str, list]) -> float:
+    """2 x prod(result) x prod(contracted dims of lhs)."""
+    shapes = _result_shapes(line)
+    if not shapes:
+        return 0.0
+    res = 1
+    for d in shapes[0][1].split(","):
+        if d:
+            res *= int(d)
+    operands = _operand_names(line)
+    lhs_dims = dims_tab.get(operands[0], []) if operands else []
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    contracted = 1
+    if m and m.group(1):
+        for idx in m.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                contracted *= lhs_dims[i]
+    return 2.0 * res * contracted
+
+
+def _op_bytes(line: str, tab: Dict[str, int]) -> float:
+    """HBM traffic model for one op.
+
+    Slicing ops read/write only the touched REGION, not their full operands
+    — charging operands in full would overcount a layer-scan (which
+    dynamic-slices one layer per iteration from the stacked params/cache) by
+    the layer count, quadratically.  In-place dynamic-update-slice (donated
+    buffers alias) moves 2x the update region.
+    """
+    res, op, operands = _split_op(line)
+    res_b = sum(_shape_bytes(dt, dims) for dt, dims in _line_shapes(res))
+    names = _OPERAND_RE.findall(operands)
+    if op in ("dynamic-slice", "slice", "gather"):
+        return float(2 * res_b)
+    if op == "dynamic-update-slice":
+        upd = tab.get(names[1], 0) if len(names) > 1 else 0
+        return float(2 * upd)
+    if op == "scatter":
+        upd = tab.get(names[2], 0) if len(names) > 2 else res_b
+        return float(2 * upd)
+    ops_b = sum(tab.get(n, 0) for n in names)
+    return float(res_b + ops_b)
+
+
+def _fusion_bytes(line: str, tab: Dict[str, int], fused_lines: list,
+                  fused_tab: Dict[str, int]) -> float:
+    """Traffic of a fusion op, aware of in-place roots.
+
+    A fusion whose root is a dynamic-update-slice writes into an ALIASED
+    buffer (XLA aliases scan-carry updates): the traffic is the update region
+    (2x: read update + write region), not the whole buffer — charging the
+    full stacked KV cache per layer-scan iteration would overcount by the
+    layer count.  Other fusions move operands in + result out.
+    """
+    root = None
+    ops_in_body = []
+    for fl in fused_lines:
+        _, fop, _ = _split_op(fl)
+        if fop and fop not in ("parameter", "bitcast", "constant"):
+            ops_in_body.append(fop)
+        if fl.startswith("ROOT"):
+            root = fl
+    # pure dtype-cast fusion: CPU-only artifact (no bf16 GEMM on host — XLA
+    # shadows the cache in f32); on the TPU target the MXU consumes bf16
+    # directly and these converts do not exist.  Charged zero (documented).
+    if ops_in_body and all(o == "convert" for o in ops_in_body):
+        return 0.0
+    if root is not None:
+        _, root_op, _ = _split_op(root)
+        if root_op in ("dynamic-update-slice", "convert"):
+            # in-place update (aliased buffer), possibly convert-wrapped:
+            # traffic = the update region, not the whole buffer
+            for fl in fused_lines:
+                _, fop, _ = _split_op(fl)
+                if fop == "dynamic-update-slice":
+                    names = _operand_names(fl)
+                    upd = fused_tab.get(names[1], 0) if len(names) > 1 else 0
+                    if upd:
+                        return float(2 * upd)
+    # generic fusion: result + operands, but an operand that the body only
+    # SLICES is charged at the sliced-region size (a layer scan reads one
+    # layer of a stacked parameter per iteration, not the whole stack).
+    res_b = sum(_shape_bytes(dt, dims) for dt, dims in _result_shapes(line))
+    names = _operand_names(line)
+    param_charge = {}
+    for fl in fused_lines:
+        _, fop, _ = _split_op(fl)
+        if fop in ("dynamic-slice", "slice", "gather"):
+            ops_in = _operand_names(fl)
+            if ops_in and ops_in[0].startswith("param_"):
+                try:
+                    pi = int(ops_in[0].split("_")[1].split(".")[0])
+                except ValueError:
+                    continue
+                sliced = sum(_shape_bytes(dt, dims)
+                             for dt, dims in _result_shapes(fl))
+                param_charge[pi] = min(param_charge.get(pi, sliced), sliced)
+    total = float(res_b)
+    for i, n in enumerate(names):
+        total += param_charge.get(i, tab.get(n, 0))
+    return total
+
+
+def _collective_payload(line: str, tab: Dict[str, int]) -> float:
+    res = sum(_shape_bytes(dt, dims) for dt, dims in _result_shapes(line))
+    ops = sum(tab.get(n, 0) for n in _operand_names(line))
+    return float(max(res, ops))
+
+
+_SKIP_OPS = ("parameter(", "constant(", "tuple(", "get-tuple-element(",
+             "bitcast(", "after-all(", "partition-id(", "replica-id(",
+             "iota(")
+
+
+def analyze_hlo(hlo_text: str) -> HloCosts:
+    comps = parse_computations(hlo_text)
+    entry = comps.pop("__entry__")[0]
+    costs = HloCosts()
+    symtabs = {name: _symtab(lines) for name, lines in comps.items()}
+    dimstabs = {name: _symtab_dims(lines) for name, lines in comps.items()}
+
+    def opcode_of(ln: str) -> str:
+        _, op, _ = _split_op(ln)
+        return op
+
+    def walk(name: str, mult: float, flops_only: bool = False):
+        tab = symtabs.get(name, {})
+        dtab = dimstabs.get(name, {})
+        for ln in comps.get(name, ()):  # pragma: no branch
+            rhs = ln.split("=", 1)[1]
+            op = opcode_of(ln)
+            if op == "while":
+                m = _WHILE_RE.search(ln)
+                if m:
+                    mt = _TRIP_RE.search(ln)
+                    trips = (int(mt.group(1)) if mt
+                             else _trip_count(comps.get(m.group(1), [])))
+                    costs.while_trip_counts[m.group(2)] = trips
+                    walk(m.group(2), mult * trips, flops_only)
+                continue
+            if op == "conditional":
+                mb = _BRANCHES_RE.search(ln)
+                if mb:
+                    for b in mb.group(1).split(","):
+                        walk(b.strip().lstrip("%"), mult, flops_only)
+                continue
+            if op in ("call", "async-start"):
+                mc = _TO_APPLY_RE.search(ln) or _CALLS_RE.search(ln)
+                if mc:
+                    walk(mc.group(1), mult, flops_only)
+            if op == "fusion":
+                mc = _CALLS_RE.search(ln)
+                if mc:
+                    walk(mc.group(1), mult, flops_only=True)
+                if not flops_only:
+                    costs.bytes += _fusion_bytes(
+                        ln, tab, comps.get(mc.group(1), []) if mc else [],
+                        symtabs.get(mc.group(1), {}) if mc else {}) * mult
+                continue
+            if op == "dot":
+                costs.flops += _dot_flops(ln, dtab) * mult
+            coll = next((c for c in COLLECTIVE_OPS
+                         if f" {c}(" in rhs or f" {c}-start(" in rhs), None)
+            if coll and not flops_only:
+                payload = _collective_payload(ln, tab) * mult
+                costs.collective_bytes += payload
+                costs.collective_census[coll][0] += int(mult)
+                costs.collective_census[coll][1] += payload
+                costs.bytes += _op_bytes(ln, tab) * mult
+                continue
+            if flops_only:
+                continue
+            if any(s in rhs for s in _SKIP_OPS):
+                continue
+            costs.bytes += _op_bytes(ln, tab) * mult
+
+    if entry:
+        walk(entry, 1.0)
+    return costs
+
+
+# ---------------------------------------------------------------------------
+# analytic model FLOPs (the "useful work" reference for §Roofline)
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D for training (N = active params, D = tokens); 2·N·D for
+    forward-only (prefill); 2·N·B per decode step."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch    # one decode step
+
+
+def roofline_terms(costs: HloCosts, chips: int,
+                   peak_flops: float = 197e12, hbm_bw: float = 819e9,
+                   link_bw: float = 50e9) -> dict:
+    """Three roofline terms in seconds (costs are per-device: the compiled
+    module is the post-partitioning per-device program)."""
+    compute_s = costs.flops / peak_flops
+    memory_s = costs.bytes / hbm_bw
+    collective_s = costs.collective_bytes / link_bw
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "bound_s": max(compute_s, memory_s, collective_s),
+    }

@@ -1,0 +1,155 @@
+"""Per-op cost breakdown of a compiled module — the §Perf instrument.
+
+``breakdown(compiled_text)`` returns the trip-count-corrected byte/flop/
+collective contribution of every op (same model as ``hlo_analysis``), sorted
+by HBM traffic.  This is what drove every hillclimbing hypothesis in
+EXPERIMENTS.md §Perf; promoted to the library so future iterations don't
+re-derive it.
+
+CLI:  PYTHONPATH=src python -m repro.launch.profile --arch <id> --shape <s>
+          [--set key=value ...] [--top 15]
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional
+
+from repro.launch import hlo_analysis as H
+
+
+@dataclasses.dataclass
+class OpCost:
+    op: str
+    line: str
+    bytes: float = 0.0
+    flops: float = 0.0
+    collective_bytes: float = 0.0
+
+
+def breakdown(hlo_text: str):
+    """→ (list[OpCost] sorted by bytes desc, totals dict)."""
+    comps = H.parse_computations(hlo_text)
+    entry = comps.pop("__entry__")[0]
+    symtabs = {n: H._symtab(l) for n, l in comps.items()}
+    dimstabs = {n: H._symtab_dims(l) for n, l in comps.items()}
+    tally: dict = collections.defaultdict(
+        lambda: OpCost("", ""))
+
+    def add(key, op, line, **kw):
+        c = tally[key]
+        c.op, c.line = op, line
+        for k, v in kw.items():
+            setattr(c, k, getattr(c, k) + v)
+
+    def walk(name, mult, flops_only=False):
+        tab = symtabs.get(name, {})
+        dtab = dimstabs.get(name, {})
+        for ln in comps.get(name, ()):
+            res, op, operands = H._split_op(ln)
+            rhs = ln.split("=", 1)[1]
+            key = ln[:120]
+            if op == "while":
+                m = H._WHILE_RE.search(ln)
+                mt = H._TRIP_RE.search(ln)
+                if m:
+                    walk(m.group(2),
+                         mult * (int(mt.group(1)) if mt else 1), flops_only)
+                continue
+            if op == "conditional":
+                mb = H._BRANCHES_RE.search(ln)
+                if mb:
+                    for b in mb.group(1).split(","):
+                        walk(b.strip().lstrip("%"), mult, flops_only)
+                continue
+            coll = next((c for c in H.COLLECTIVE_OPS
+                         if f" {c}(" in rhs or f" {c}-start(" in rhs), None)
+            if coll and not flops_only:
+                p = H._collective_payload(ln, tab) * mult
+                add(key, coll, ln, collective_bytes=p,
+                    bytes=H._op_bytes(ln, tab) * mult)
+                continue
+            if op == "fusion":
+                mc = H._CALLS_RE.search(ln)
+                if mc:
+                    walk(mc.group(1), mult, flops_only=True)
+                if not flops_only:
+                    b = H._fusion_bytes(
+                        ln, tab, comps.get(mc.group(1), []) if mc else [],
+                        symtabs.get(mc.group(1), {}) if mc else {}) * mult
+                    add(key, op, ln, bytes=b)
+                continue
+            if op == "dot":
+                add(key, op, ln, flops=H._dot_flops(ln, dtab) * mult)
+            if flops_only:
+                continue
+            if any(s in rhs for s in H._SKIP_OPS):
+                continue
+            add(key, op, ln, bytes=H._op_bytes(ln, tab) * mult)
+
+    if entry:
+        walk(entry, 1.0)
+    costs = sorted(tally.values(), key=lambda c: -c.bytes)
+    totals = {
+        "bytes": sum(c.bytes for c in costs),
+        "flops": sum(c.flops for c in costs),
+        "collective_bytes": sum(c.collective_bytes for c in costs),
+    }
+    return costs, totals
+
+
+def print_breakdown(costs, totals, top: int = 15,
+                    hbm_bw: float = 819e9, link_bw: float = 50e9):
+    print(f"memory {totals['bytes']:.3e} B = {totals['bytes']/hbm_bw:.4f}s | "
+          f"flops {totals['flops']:.3e} | "
+          f"collective {totals['collective_bytes']:.3e} B = "
+          f"{totals['collective_bytes']/link_bw:.4f}s")
+    for c in costs[:top]:
+        share = c.bytes / totals["bytes"] * 100 if totals["bytes"] else 0
+        print(f"{c.bytes:10.3e} ({share:4.1f}%) {c.op:18s} {c.line[:78]}")
+
+
+def _main():
+    import os
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
+    os.environ.setdefault("REPRO_NO_KERNELS", "1")
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="config overrides key=value (e.g. kv_layout=fused)")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs import SHAPES
+    from repro.launch.dryrun import cell_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_step
+
+    cfg = cell_config(args.arch, args.shape)
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = {"true": True, "false": False}.get(
+            v.lower(), int(v) if v.isdigit() else v)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    with mesh:
+        built = build_step(cfg, SHAPES[args.shape], mesh)
+        compiled = jax.jit(
+            built.fn, in_shardings=built.in_shardings,
+            out_shardings=built.out_shardings,
+            donate_argnums=built.donate_argnums,
+        ).lower(*built.input_specs).compile()
+    costs, totals = breakdown(compiled.as_text())
+    print_breakdown(costs, totals, top=args.top)
+
+
+if __name__ == "__main__":
+    _main()

@@ -1,0 +1,323 @@
+"""Step builders: pjit-ready train/prefill/decode steps with full sharding.
+
+This is where logical axes meet the mesh: parameter leaves get PartitionSpecs
+by name (stacked-layer and expert dims handled), optimizer state gets ZeRO-1
+data-axis sharding, caches get batch/heads/seq sharding per profile, and the
+steps are wrapped with ``use_sharder`` so activation constraints resolve.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.data.pipeline import make_batch_specs
+from repro.models import api
+from repro.optim import OptState, init_opt_state, adamw_update
+from repro.parallel.sharding import Sharder, rules_for, use_sharder
+
+# ---------------------------------------------------------------------------
+# parameter logical axes by leaf name
+# ---------------------------------------------------------------------------
+
+# name → logical axes for the *unstacked* leaf.  "attn_io" is the TP axis of
+# attention projections, "moe_ff" the per-expert FFN axis (moe_cap profile).
+PARAM_AXES_2D = {
+    "table": ("vocab", "d_model"),
+    "head": ("d_model", "vocab"),
+    "wq": ("d_model", "attn_io"), "wk": ("d_model", "attn_io"),
+    "wv": ("d_model", "attn_io"), "wo": ("attn_io", "d_model"),
+    "w_gate": ("d_model", "d_ff"), "w_up": ("d_model", "d_ff"),
+    "w_out": ("d_ff", "d_model"),
+    "w_xz": ("d_model", "inner"), "w_bc": ("d_model", None),
+    "w_dt": ("d_model", None),
+    "w_branch": ("d_model", "inner"), "w_a": ("inner", "inner_out"),
+    "w_i": ("inner", "inner_out"), "router": ("d_model", None),
+    "conv_w": (None, "inner"),
+}
+PARAM_AXES_MOE_3D = {                    # [experts, in, out]
+    "w_gate": ("experts", "d_model", "moe_ff"),
+    "w_up": ("experts", "d_model", "moe_ff"),
+    "w_out": ("experts", "moe_ff", "d_model"),
+}
+PARAM_AXES_1D = {
+    "conv_b": ("inner",), "gate_norm": ("inner",), "lam": ("inner",),
+    "b_a": ("inner",), "b_i": ("inner",),
+}
+
+# extra rules appended to every profile
+EXTRA_RULES = {"attn_io": "model", "inner_out": None, "moe_ff": None}
+EXTRA_RULES_MOE_CAP = {"attn_io": "model", "inner_out": None,
+                       "moe_ff": "model"}
+
+
+def make_sharder(cfg: ModelConfig, mesh) -> Sharder:
+    rules = rules_for(cfg.sharding_profile)
+    rules.update(EXTRA_RULES_MOE_CAP if cfg.sharding_profile == "moe_cap"
+                 else EXTRA_RULES)
+    return Sharder(mesh, rules)
+
+
+def _leaf_logical_axes(path, leaf, cfg: ModelConfig):
+    names = [getattr(k, "key", getattr(k, "name", None))
+             for k in path if hasattr(k, "key") or hasattr(k, "name")]
+    name = names[-1] if names else None
+    stacked = 1 if (names and names[0] in ("unit", "encoder", "decoder")) else 0
+    is_moe = "ffn" in names and cfg.moe is not None and leaf.ndim - stacked == 3
+    core = leaf.ndim - stacked
+    if is_moe and name in PARAM_AXES_MOE_3D:
+        axes = PARAM_AXES_MOE_3D[name]
+    elif core == 2 and name in PARAM_AXES_2D:
+        axes = PARAM_AXES_2D[name]
+    elif core == 1 and name in PARAM_AXES_1D:
+        axes = PARAM_AXES_1D[name]
+    else:
+        axes = (None,) * core
+    return (None,) * stacked + tuple(axes)
+
+
+def param_specs(params, cfg: ModelConfig, sharder: Sharder):
+    """PartitionSpec pytree for a parameter tree (respects divisibility)."""
+    def one(path, leaf):
+        logical = _leaf_logical_axes(path, leaf, cfg)
+        return sharder.safe_spec(leaf.shape, logical)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def zero1_specs(pspecs, params, sharder: Sharder):
+    """ZeRO-1: additionally shard optimizer-state leaves over the data axis
+    (first dim that is free and divisible)."""
+    data_axes = tuple(a for a in ("pod", "data")
+                      if a in sharder.mesh.axis_names)
+    sizes = dict(zip(sharder.mesh.axis_names, sharder.mesh.devices.shape))
+    dp = int(np.prod([sizes[a] for a in data_axes]))
+
+    def one(spec, leaf):
+        entries = list(tuple(spec) + (None,) * (leaf.ndim - len(tuple(spec))))
+        for i, (dim, e) in enumerate(zip(leaf.shape, entries)):
+            if e is None and dim % dp == 0 and dim > 0 and dp > 1:
+                entries[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+                return sharder._spec_from_axes(entries)
+        return spec
+    return jax.tree_util.tree_map(one, pspecs, params)
+
+
+def cache_specs(caches, cfg: ModelConfig, sharder: Sharder):
+    """PartitionSpecs for decode caches by leaf name."""
+    def one(path, leaf):
+        names = [getattr(k, "key", None) for k in path if hasattr(k, "key")]
+        name = names[-1] if names else None
+        stacked = 1 if (names and names[0] in ("unit",)) or leaf.ndim >= 4 else 0
+        if name in ("k", "v"):
+            logical = (None, "batch", "kv_seq", "kv_heads", None)[
+                5 - leaf.ndim:]
+        elif name in ("cross_k", "cross_v"):
+            logical = (None, "batch", "kv_heads", "frames", None)[
+                5 - leaf.ndim:]
+        elif name == "state":
+            logical = (None, "batch", "inner", None, None)[5 - leaf.ndim:]
+        elif name == "conv":
+            logical = (None, "batch", None, "inner")[4 - leaf.ndim:]
+        elif name == "h":
+            logical = (None, "batch", "inner")[3 - leaf.ndim:]
+        else:
+            logical = (None,) * leaf.ndim
+        return sharder.safe_spec(leaf.shape, logical)
+    return jax.tree_util.tree_map_with_path(one, caches)
+
+
+def batch_specs_sharding(batch_specs, sharder: Sharder):
+    def one(leaf):
+        logical = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return sharder.safe_spec(leaf.shape, logical)
+    return jax.tree_util.tree_map(one, batch_specs)
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: object                    # the python step callable (to be jitted)
+    in_shardings: object
+    out_shardings: object
+    input_specs: tuple            # ShapeDtypeStructs for .lower()
+    donate_argnums: tuple = ()
+
+
+def _eval_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(api.init_params, cfg), jax.random.PRNGKey(0))
+
+
+def _auto_grad_accum(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                     budget_bytes: float = 4e9) -> int:
+    """Pick microbatch count so per-chip activation residuals fit the budget.
+
+    Residual estimate: layer-scan carries (B_loc x S x d_model bf16 per
+    layer) + fp32 logits (B_loc x S x vocab_shard) — the two dominant
+    live-across-bwd tensors under full remat.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = sizes.get("pod", 1) * sizes.get("data", 1)
+    tp = sizes.get("model", 1)
+    b_loc = max(shape.global_batch // dp, 1)
+    tokens = b_loc * shape.seq_len
+    resid = tokens * cfg.d_model * 2 * cfg.n_layers
+    vshard = -(-cfg.vocab_size // tp)
+    logits = tokens * vshard * 4 * 2          # logits + grad copy
+    need = resid + logits
+    accum = 1
+    while need / accum > budget_bytes and accum < shape.global_batch // dp:
+        accum *= 2
+    return accum
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                     tcfg: Optional[TrainConfig] = None,
+                     master_weights: bool = False) -> BuiltStep:
+    """Full training step: (accumulated) loss → grads → AdamW(+ZeRO-1)."""
+    tcfg = tcfg or TrainConfig()
+    sharder = make_sharder(cfg, mesh)
+    accum = tcfg.grad_accum or _auto_grad_accum(cfg, shape, mesh)
+
+    def train_step(state, batch):
+        with use_sharder(sharder):
+            params = state["params"]
+
+            def loss_and_grads(mbatch):
+                return jax.value_and_grad(
+                    lambda p: api.loss_fn(p, mbatch, cfg))(params)
+
+            if accum == 1:
+                loss, grads = loss_and_grads(batch)
+                grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            else:
+                mb = jax.tree.map(
+                    lambda x: x.reshape((accum, x.shape[0] // accum)
+                                        + x.shape[1:]), batch)
+
+                def micro(gacc, mbatch):
+                    l, g = loss_and_grads(mbatch)
+                    gacc = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                    return gacc, l
+
+                gacc0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                grads, losses = jax.lax.scan(micro, gacc0, mb)
+                grads = jax.tree.map(lambda g: g / accum, grads)
+                loss = losses.mean()
+            new_params, new_opt, metrics = adamw_update(
+                grads, state["opt"], params, tcfg)
+            return ({"params": new_params, "opt": new_opt},
+                    {"loss": loss, **metrics})
+
+    params_shapes = _eval_params(cfg)
+    pspecs = param_specs(params_shapes, cfg, sharder)
+    opt_shapes = jax.eval_shape(
+        functools.partial(init_opt_state, tcfg=tcfg, master=master_weights),
+        params_shapes)
+    mspecs = (zero1_specs(pspecs, params_shapes, sharder) if tcfg.zero1
+              else pspecs)
+    opt_specs = OptState(step=P(), m=mspecs, v=mspecs,
+                         master=(mspecs if master_weights else None))
+    bspecs = make_batch_specs(cfg, shape.global_batch,
+                              shape.seq_len, kind="train")
+    bshard = batch_specs_sharding(bspecs, sharder)
+
+    state_specs = {"params": pspecs, "opt": opt_specs}
+    state_shapes = {"params": params_shapes, "opt": opt_shapes}
+    ns = lambda tree: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    in_shardings = (ns(state_specs), ns(bshard))
+    out_shardings = (ns(state_specs),
+                     {"loss": NamedSharding(mesh, P()),
+                      "grad_norm": NamedSharding(mesh, P()),
+                      "lr": NamedSharding(mesh, P())})
+    return BuiltStep(train_step, in_shardings, out_shardings,
+                     (state_shapes, bspecs), donate_argnums=(0,))
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh) -> BuiltStep:
+    sharder = make_sharder(cfg, mesh)
+    t_max = shape.seq_len
+
+    def prefill_step(params, batch):
+        with use_sharder(sharder):
+            logits, caches = api.prefill_fn(params, batch, cfg, t_max)
+            return logits, caches
+
+    params_shapes = _eval_params(cfg)
+    pspecs = param_specs(params_shapes, cfg, sharder)
+    if cfg.serve_fsdp:   # inference FSDP: stream weights over the data axis
+        pspecs = zero1_specs(pspecs, params_shapes, sharder)
+    bspecs = make_batch_specs(cfg, shape.global_batch, shape.seq_len,
+                              kind="prefill")
+    bshard = batch_specs_sharding(bspecs, sharder)
+    cache_shapes = jax.eval_shape(
+        functools.partial(api.init_cache, cfg, shape.global_batch, t_max))
+    cspecs = cache_specs(cache_shapes, cfg, sharder)
+    ns = lambda tree: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    logits_spec = sharder.safe_spec(
+        (shape.global_batch, 1, cfg.vocab_size), ("batch", None, "vocab"))
+    in_shardings = (ns(pspecs), ns(bshard))
+    out_shardings = (NamedSharding(mesh, logits_spec), ns(cspecs))
+    return BuiltStep(prefill_step, in_shardings, out_shardings,
+                     (params_shapes, bspecs))
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh) -> BuiltStep:
+    """One decode step against a seq_len-deep KV cache (the serve_step that
+    ``decode_*``/``long_*`` cells lower)."""
+    sharder = make_sharder(cfg, mesh)
+    t_max = shape.seq_len
+
+    def serve_step(params, caches, token, pos):
+        with use_sharder(sharder):
+            logits, new_caches = api.decode_fn(params, token, caches, pos, cfg)
+            return logits, new_caches
+
+    params_shapes = _eval_params(cfg)
+    pspecs = param_specs(params_shapes, cfg, sharder)
+    if cfg.serve_fsdp:   # inference FSDP: stream weights over the data axis
+        pspecs = zero1_specs(pspecs, params_shapes, sharder)
+    cache_shapes = jax.eval_shape(
+        functools.partial(api.init_cache, cfg, shape.global_batch, t_max))
+    cspecs = cache_specs(cache_shapes, cfg, sharder)
+    tok_spec = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    ns = lambda tree: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    logits_spec = sharder.safe_spec(
+        (shape.global_batch, 1, cfg.vocab_size), ("batch", None, "vocab"))
+    in_shardings = (ns(pspecs), ns(cspecs),
+                    NamedSharding(mesh, sharder.safe_spec((shape.global_batch, 1),
+                                                          ("batch", None))),
+                    NamedSharding(mesh, P()))
+    out_shardings = (NamedSharding(mesh, logits_spec), ns(cspecs))
+    return BuiltStep(serve_step, in_shardings, out_shardings,
+                     (params_shapes, cache_shapes, tok_spec, pos_spec),
+                     donate_argnums=(1,))
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
+               tcfg: Optional[TrainConfig] = None) -> BuiltStep:
+    """Dispatch on the shape kind (train / prefill / decode)."""
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh, tcfg)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh)
+    return build_decode_step(cfg, shape, mesh)

@@ -1,0 +1,8 @@
+"""Model zoo: dense GQA transformers, gemma3 local:global, Mamba-2 SSD,
+RG-LRU hybrids, MoE (EP), whisper enc-dec, VLM backbones."""
+
+from repro.models.api import (init_params, loss_fn, prefill_fn, decode_fn,
+                              init_cache, greedy_generate)
+
+__all__ = ["init_params", "loss_fn", "prefill_fn", "decode_fn", "init_cache",
+           "greedy_generate"]

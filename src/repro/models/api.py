@@ -1,0 +1,105 @@
+"""Unified model API: family dispatch + step builders.
+
+Every architecture exposes the same four entry points regardless of family:
+
+* ``init_params(cfg, key)``
+* ``loss_fn(params, batch, cfg)``                  (training)
+* ``prefill_fn(params, batch, cfg, t_max)``        (serving, installs caches)
+* ``decode_fn(params, token, caches, pos, cfg)``   (serving, one step)
+
+``batch`` carries modality stubs where assigned: ``patch_embeds`` (VLM) and
+``frames`` (audio).  The launch layer (`repro.launch`) wraps these into
+pjit-ed ``train_step`` / ``serve_step`` with sharding and optimizer logic.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models import lm, whisper
+from repro.models.moe import aux_load_balance_loss
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    if cfg.family == "audio":
+        return whisper.init_params(cfg, key)
+    return lm.init_params(cfg, key)
+
+
+def _kv_chunk_for(seq: int) -> int:
+    return 1024 if seq > 2048 else 0
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig) -> jax.Array:
+    tokens = batch["tokens"]
+    targets = batch["targets"]
+    kv_chunk = _kv_chunk_for(tokens.shape[1])
+    if cfg.family == "audio":
+        logits = whisper.forward(params, tokens, batch["frames"], cfg,
+                                 kv_chunk=kv_chunk)
+    else:
+        logits = lm.forward(params, tokens, cfg,
+                            patch_embeds=batch.get("patch_embeds"),
+                            kv_chunk=kv_chunk)
+        if cfg.n_patches and "patch_embeds" in batch:
+            logits = logits[:, cfg.n_patches:]   # loss over text positions
+    loss = cm.softmax_xent(logits, targets, cfg.vocab_size)
+    if cfg.moe is not None:
+        # router balance on the embedding output of the first tokens (cheap
+        # proxy shared across layers; per-layer aux is summed during forward
+        # in full-fidelity mode — see DESIGN.md §8)
+        x = cm.embed_apply(params["embed"], tokens)
+        first = (params["unit"][0]["ffn"] if params.get("unit")
+                 else params["tail"][0]["ffn"])
+        router0 = jax.tree.map(lambda a: a[0], first)
+        loss = loss + 0.01 * aux_load_balance_loss(router0, x, cfg)
+    return loss
+
+
+def prefill_fn(params, batch: dict, cfg: ModelConfig, t_max: int):
+    tokens = batch["tokens"]
+    kv_chunk = _kv_chunk_for(tokens.shape[1])
+    if cfg.family == "audio":
+        return whisper.prefill(params, tokens, batch["frames"], cfg, t_max)
+    return lm.prefill(params, tokens, cfg, t_max,
+                      patch_embeds=batch.get("patch_embeds"),
+                      kv_chunk=kv_chunk)
+
+
+def init_cache(cfg: ModelConfig, batch: int, t_max: int):
+    if cfg.family == "audio":
+        return whisper.init_cache(cfg, batch, t_max)
+    return lm.init_cache(cfg, batch, t_max)
+
+
+def decode_fn(params, token, caches, pos, cfg: ModelConfig):
+    if cfg.family == "audio":
+        return whisper.decode_step(params, token, caches, pos, cfg)
+    return lm.decode_step(params, token, caches, pos, cfg)
+
+
+def greedy_generate(params, prompt, cfg: ModelConfig, steps: int,
+                    t_max: int, extra: Optional[dict] = None):
+    """Greedy decoding loop (used by examples and integration tests)."""
+    batch = {"tokens": prompt, **(extra or {})}
+    logits, caches = prefill_fn(params, batch, cfg, t_max)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    pos0 = prompt.shape[1] + (cfg.n_patches or 0)
+    out = [tok]
+
+    def body(i, state):
+        tok, caches, acc = state
+        logits, caches = decode_fn(params, tok, caches, pos0 + i, cfg)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, tok, i, axis=1)
+        return tok, caches, acc
+
+    acc = jnp.zeros((prompt.shape[0], steps), dtype=prompt.dtype)
+    tok, caches, acc = jax.lax.fori_loop(
+        0, steps, lambda i, s: body(i, s), (tok, caches, acc))
+    return acc

@@ -1,0 +1,406 @@
+"""Shared model components: norms, RoPE, attention (train/prefill/decode),
+MLP variants, embeddings, losses, initialisation.
+
+All functions are pure; parameters are plain dicts of arrays.  Activation
+sharding is annotated through :func:`repro.parallel.sharding.shard` with
+logical axis names, so the same code runs unsharded on CPU and pjit-sharded
+on the production mesh.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard
+from repro.kernels import ops as kops
+
+
+# ----------------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------------
+
+def trunc_normal(key, shape, dtype, scale: float) -> jax.Array:
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype) -> jax.Array:
+    return trunc_normal(key, (d_in, d_out), dtype, 1.0 / math.sqrt(d_in))
+
+
+def pad_vocab(v: int, multiple: int = 128) -> int:
+    return -(-v // multiple) * multiple
+
+
+# ----------------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(x, p, kind: str):
+    if kind == "rms":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def init_norm(key, d, dtype, kind: str):
+    del key
+    if kind == "rms":
+        return {"scale": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+# ----------------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding on ``x [..., S, H, D]`` with ``positions [..., S]``."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq        # [..., S, half]
+    ang = ang[..., None, :]                                      # [..., S, 1, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# attention
+# ----------------------------------------------------------------------------
+
+def _gqa_scores(q, k):
+    """q [B,Sq,Hkv,G,D] x k [B,Sk,Hkv,D] → [B,Hkv,G,Sq,Sk] (no KV repeat)."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              q_positions: jax.Array, kv_positions: jax.Array,
+              causal: bool = True, window: int = 0,
+              kv_chunk: int = 0) -> jax.Array:
+    """Memory-efficient multi-query attention.
+
+    ``q [B, Sq, H, D]``, ``k/v [B, Sk, Hkv, D]``; grouped heads are folded so
+    KV is never materialised H/Hkv times.  When ``kv_chunk > 0`` the KV axis
+    is processed in chunks with an online-softmax (flash-style) scan — the
+    form used for the 32k prefill and all long-context cells, bounding live
+    intermediates to one [B, H, Sq, kv_chunk] tile per step.
+    ``window > 0`` restricts attention to the last ``window`` positions
+    (sliding-window / local layers).
+    """
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, d) * (d ** -0.5)
+    scale_mask = lambda s, qp, kp: _mask_scores(s, qp, kp, causal, window)
+
+    if not kv_chunk or kv_chunk >= sk:
+        scores = _gqa_scores(qg, k)                              # f32
+        scores = scale_mask(scores, q_positions, kv_positions)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+        return out.reshape(b, sq, h, d)
+
+    n_chunks = sk // kv_chunk
+    k_c = k.reshape(b, n_chunks, kv_chunk, hkv, d)
+    v_c = v.reshape(b, n_chunks, kv_chunk, hkv, d)
+    kp_c = kv_positions.reshape(n_chunks, kv_chunk)
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        kc, vc, kpc = inp
+        s = _gqa_scores(qg, kc)                                  # [B,hkv,g,Sq,C]
+        s = scale_mask(s, q_positions, kpc)
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[..., None])
+        l_cur = l_prev * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc)
+        acc = acc * alpha[..., None].astype(acc.dtype) + pv
+        return (m_cur, l_cur, acc), None
+
+    m0 = jnp.full((b, hkv, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, g, sq, d), v.dtype)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (jnp.moveaxis(k_c, 1, 0), jnp.moveaxis(v_c, 1, 0), kp_c))
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    return jnp.moveaxis(out, -2, 1).reshape(b, sq, h, d)
+
+
+def _mask_scores(scores, q_pos, k_pos, causal, window):
+    """Apply causal / sliding-window masking in position space."""
+    qp = q_pos[..., :, None] if q_pos.ndim == 1 else q_pos[:, None, None, :, None]
+    kp = k_pos[..., None, :] if k_pos.ndim == 1 else k_pos[:, None, None, None, :]
+    neg = jnp.float32(-1e30)
+    if causal:
+        scores = jnp.where(qp >= kp, scores, neg)
+    if window:
+        scores = jnp.where(qp - kp < window, scores, neg)
+    return scores
+
+
+def attention_block_params(key, cfg, dtype) -> dict:
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, dtype),
+    }
+
+
+def sinusoidal_positions(seq: int, d: int) -> jax.Array:
+    """Standard sinusoidal absolute position embedding [seq, d] (whisper)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, 2.0 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def sinusoidal_at(pos: jax.Array, d: int) -> jax.Array:
+    """Sinusoidal embedding for a single (traced) position → [d]."""
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10_000.0, 2.0 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+
+
+def attention_apply(p, x, cfg, *, positions, layer_kind: str,
+                    cache: Optional[dict] = None, kv_chunk: int = 0,
+                    apply_rope: bool = True, causal: bool = True):
+    """Self-attention with optional KV cache.
+
+    Training/prefill: ``cache`` is None → keys from current sequence; returns
+    (out, new_kv) where new_kv is the line-major KV for cache installation.
+    Decode: ``cache = {"k": [B,T,Hkv,D] line-major, "v": ..., "pos": scalar}``;
+    the cache is read through the Medusa KV layout engine (port-major
+    head streams) — the paper's read network in production (DESIGN.md §3.1).
+    """
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+    theta = cfg.rope_theta
+    if layer_kind == "A" and cfg.rope_theta_global:
+        theta = cfg.rope_theta_global
+    window = cfg.sliding_window if layer_kind == "L" else 0
+
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, s, hkv, hd)
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    k = shard(k, "batch", "seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "seq", "kv_heads", "head_dim")
+    if apply_rope:
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+
+    if cache is None:
+        out = attention(q, k, v, positions, positions, causal=causal,
+                        window=window, kv_chunk=kv_chunk)
+        new_kv = {"k": k, "v": v}
+    else:
+        pos = cache["pos"]            # scalar, or [B] for per-slot serving
+        ck = _cache_write(cache["k"], k, pos)
+        cv = _cache_write(cache["v"], v, pos)
+        t = ck.shape[1]
+        kv_pos = jnp.arange(t)
+        # single-token decode: q position == pos; [B, T] mask when per-slot
+        valid = (kv_pos <= pos if pos.ndim == 0
+                 else kv_pos[None, :] <= pos[:, None])
+        out = cached_attention(q, ck, cv, pos, kv_pos, valid, window, cfg)
+        new_kv = {"k": ck, "v": cv, "pos": pos}
+
+    out = shard(out, "batch", "seq", "heads", "head_dim")
+    y = out.reshape(b, s, h * hd) @ p["wo"]
+    return shard(y, "batch", "seq", "d_model"), new_kv
+
+
+def _kv_port_major(c: jax.Array, cfg) -> jax.Array:
+    """[B, T, Hkv, D] line-major → [B, Hkv, T, D] port-major via the
+    configured interconnect fabric (medusa kernel / crossbar / oracle)."""
+    if cfg.kv_layout == "medusa" and kops.kernels_enabled():
+        return jax.vmap(kops.kv_line_to_port)(c)
+    if cfg.kv_layout == "crossbar":
+        # over-provisioned routing: explicit gather through an index tensor
+        b, t, hkv, d = c.shape
+        flat = c.reshape(b, t * hkv, d)
+        idx = (jnp.arange(hkv)[:, None] + jnp.arange(t)[None, :] * hkv).reshape(-1)
+        return jnp.take(flat, idx, axis=1).reshape(b, hkv, t, d)
+    return jnp.swapaxes(c, 1, 2)
+
+
+def _cache_write(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """Write the new token's K/V at ``pos`` (scalar, or per-row [B])."""
+    if pos.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(cache, new, pos, axis=1)
+    return jax.vmap(lambda c, n, p:
+                    jax.lax.dynamic_update_slice_in_dim(c, n, p, axis=0)
+                    )(cache, new, pos)
+
+
+def _expand_mask(mask: jax.Array) -> jax.Array:
+    """[T] or [B, T] decode mask → broadcastable over [B,hkv,g,1,T]."""
+    if mask.ndim == 1:
+        return mask[None, None, None, None, :]
+    return mask[:, None, None, None, :]
+
+
+def cached_attention(q, ck, cv, pos, kv_pos, valid, window, cfg):
+    """Decode attention over a line-major cache, dispatching on the
+    configured interconnect fabric.
+
+    ``medusa``/``crossbar``/``oracle``: re-bank the cache to port-major head
+    streams first (the paper's read network; on TPU the medusa form is the
+    Pallas exchange-network kernel).  ``fused``: beyond-paper optimisation —
+    contract directly against the line-major cache (no materialised copy; the
+    layout conversion happens implicitly in the MXU operand load), halving
+    cache HBM traffic per step.  All fabrics are value-identical.
+    """
+    if cfg.kv_layout == "fused":
+        ck = shard(ck, "batch", "kv_seq", "kv_heads", "head_dim")
+        cv = shard(cv, "batch", "kv_seq", "kv_heads", "head_dim")
+        return _decode_attention_linemajor(q, ck, cv, pos, kv_pos, valid,
+                                           window)
+    ck_p, cv_p = _kv_port_major(ck, cfg), _kv_port_major(cv, cfg)
+    ck_p = shard(ck_p, "batch", "kv_heads", "kv_seq", "head_dim")
+    cv_p = shard(cv_p, "batch", "kv_heads", "kv_seq", "head_dim")
+    return _decode_attention(q, ck_p, cv_p, pos, kv_pos, valid, window)
+
+
+def _decode_attention_linemajor(q, k, v, pos, kv_pos, valid, window):
+    """Fused decode attention: ``q [B,1,H,D]`` x ``k/v [B,T,Hkv,D]``.
+
+    The cache-side dots run in the cache dtype (bf16 x bf16 is MXU-native;
+    forcing an f32 ``preferred_element_type`` makes XLA carry an f32 COPY of
+    the whole cache through the layer scan).  Only the tiny score tensor is
+    upcast for the softmax.
+    """
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, d) * (d ** -0.5)
+    s = jnp.einsum("bqhgd,bthd->bhgqt", qg.astype(k.dtype), k)
+    s = s.astype(jnp.float32)
+    mask = valid
+    if window:
+        dist = (pos - kv_pos if pos.ndim == 0
+                else pos[:, None] - kv_pos[None, :])
+        mask = mask & (dist < window)
+    s = jnp.where(_expand_mask(mask), s, jnp.float32(-1e30))
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqt,bthd->bqhgd", p.astype(v.dtype), v)
+    return out.reshape(b, sq, h, d)
+
+
+def _decode_attention(q, k_pm, v_pm, pos, kv_pos, valid, window):
+    """Single-step decode attention over a port-major cache.
+
+    ``q [B,1,H,D]``, ``k_pm/v_pm [B,Hkv,T,D]``.  Cache-side dots in cache
+    dtype (see ``_decode_attention_linemajor``)."""
+    b, sq, h, d = q.shape
+    hkv = k_pm.shape[1]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, d) * (d ** -0.5)
+    s = jnp.einsum("bqhgd,bhkd->bhgqk", qg.astype(k_pm.dtype), k_pm)
+    s = s.astype(jnp.float32)
+    mask = valid
+    if window:
+        dist = (pos - kv_pos if pos.ndim == 0
+                else pos[:, None] - kv_pos[None, :])
+        mask = mask & (dist < window)
+    s = jnp.where(_expand_mask(mask), s, jnp.float32(-1e30))
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bqhgd", p.astype(v_pm.dtype), v_pm)
+    return out.reshape(b, sq, h, d)
+
+
+# ----------------------------------------------------------------------------
+# MLP
+# ----------------------------------------------------------------------------
+
+def mlp_params(key, d_model, d_ff, kind, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_out": dense_init(ks[2], d_ff, d_model, dtype)}
+    if kind in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(ks[0], d_model, d_ff, dtype)
+        p["w_up"] = dense_init(ks[1], d_model, d_ff, dtype)
+    else:
+        p["w_up"] = dense_init(ks[1], d_model, d_ff, dtype)
+    return p
+
+
+def mlp_apply(p, x, kind: str) -> jax.Array:
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else (
+            lambda u: jax.nn.gelu(u, approximate=True))
+        h = act(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"], approximate=True)
+    h = shard(h, "batch", "seq", "d_ff")
+    return shard(h @ p["w_out"], "batch", "seq", "d_model")
+
+
+# ----------------------------------------------------------------------------
+# embeddings / head / loss
+# ----------------------------------------------------------------------------
+
+def embed_params(key, cfg, dtype) -> dict:
+    v = pad_vocab(cfg.vocab_size)
+    p = {"table": trunc_normal(key, (v, cfg.d_model), dtype,
+                               1.0 / math.sqrt(cfg.d_model))}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(jax.random.fold_in(key, 1), cfg.d_model, v, dtype)
+    return p
+
+
+def embed_apply(p, tokens: jax.Array) -> jax.Array:
+    table = shard(p["table"], "vocab", "d_model")
+    return shard(jnp.take(table, tokens, axis=0), "batch", "seq", "d_model")
+
+
+def logits_apply(p, x: jax.Array, cfg) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = shard(p["table"], "vocab", "d_model")
+        logits = jnp.einsum("bsd,vd->bsv", x, w,
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["head"],
+                            preferred_element_type=jnp.float32)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def softmax_xent(logits: jax.Array, targets: jax.Array,
+                 vocab_size: int) -> jax.Array:
+    """Mean cross-entropy; padded vocab entries masked out of the softmax."""
+    v = logits.shape[-1]
+    if v > vocab_size:
+        pad_mask = jnp.arange(v) >= vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

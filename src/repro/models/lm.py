@@ -1,0 +1,409 @@
+"""Decoder-only LM assembler: pattern-scanned blocks over every family.
+
+A model is a tiled ``block_pattern`` (e.g. ``"A"`` dense, ``"LLLLLG"``→
+``"LLLLLA"`` gemma3, ``"RRA"`` recurrentgemma, ``"M"`` mamba2).  The pattern
+unit is scanned ``reps = n_layers // len(pattern)`` times with stacked
+parameters (one compiled body regardless of depth — critical for 80 dry-run
+compiles on CPU); remainder layers run unrolled ("tail").
+
+Caches are pytrees stacked the same way, so ``serve_step`` scans decode with
+the cache as scan xs/ys.  VLM configs prepend stub patch embeddings.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models.moe import moe_params, moe_apply
+from repro.models.mamba2 import mamba_params, mamba_apply
+from repro.models.rglru import rglru_params, rglru_apply
+from repro.parallel.sharding import shard
+
+
+def pattern_unit(cfg: ModelConfig):
+    pat = cfg.block_pattern
+    reps = cfg.n_layers // len(pat)
+    tail = pat[: cfg.n_layers - reps * len(pat)]
+    return pat, reps, tail
+
+
+# ----------------------------------------------------------------------------
+# parameters
+# ----------------------------------------------------------------------------
+
+def _block_params(key, t: str, cfg: ModelConfig, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {"norm1": cm.init_norm(ks[0], cfg.d_model, dtype, cfg.norm)}
+    if t in ("A", "L"):
+        p["attn"] = cm.attention_block_params(ks[1], cfg, dtype)
+    elif t == "R":
+        p["rec"] = rglru_params(ks[1], cfg, dtype)
+    elif t == "M":
+        p["mixer"] = mamba_params(ks[1], cfg, dtype)
+        return p                      # mamba block has no separate FFN
+    else:
+        raise ValueError(f"unknown block type {t!r}")
+    p["norm2"] = cm.init_norm(ks[2], cfg.d_model, dtype, cfg.norm)
+    if cfg.moe is not None:
+        p["ffn"] = moe_params(ks[3], cfg, dtype)
+    else:
+        p["ffn"] = cm.mlp_params(ks[3], cfg.d_model, cfg.d_ff, cfg.mlp, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = cfg.param_dtype
+    unit, reps, tail = pattern_unit(cfg)
+    k_emb, k_unit, k_tail, k_fin = jax.random.split(key, 4)
+    params = {"embed": cm.embed_params(k_emb, cfg, dtype)}
+    unit_params = []
+    for i, t in enumerate(unit):
+        kt = jax.random.fold_in(k_unit, i)
+        if reps > 0:
+            stacked = jax.vmap(lambda k: _block_params(k, t, cfg, dtype))(
+                jax.random.split(kt, reps))
+            unit_params.append(stacked)
+    params["unit"] = unit_params
+    params["tail"] = [_block_params(jax.random.fold_in(k_tail, i), t, cfg, dtype)
+                      for i, t in enumerate(tail)]
+    params["final_norm"] = cm.init_norm(k_fin, cfg.d_model, dtype, cfg.norm)
+    return params
+
+
+# ----------------------------------------------------------------------------
+# caches (decode)
+# ----------------------------------------------------------------------------
+
+def _block_cache(t: str, cfg: ModelConfig, batch: int, t_max: int, dtype):
+    hd = cfg.resolved_head_dim
+    if t in ("A", "L"):
+        # local layers only ever need the sliding window
+        length = min(t_max, cfg.sliding_window) if (
+            t == "L" and cfg.sliding_window) else t_max
+        return {"k": jnp.zeros((batch, length, cfg.n_kv_heads, hd), dtype),
+                "v": jnp.zeros((batch, length, cfg.n_kv_heads, hd), dtype)}
+    if t == "R":
+        w = (cfg.rglru.lru_width or cfg.d_model)
+        return {"conv": jnp.zeros((batch, cfg.rglru.conv_width - 1, w), dtype),
+                "h": jnp.zeros((batch, w), jnp.float32)}
+    if t == "M":
+        s = cfg.ssm
+        d_in = s.expand * cfg.d_model
+        nh = d_in // s.head_dim
+        return {"conv": jnp.zeros((batch, s.conv_width - 1,
+                                   d_in + 2 * s.d_state), dtype),
+                "state": jnp.zeros((batch, nh, s.head_dim, s.d_state),
+                                   jnp.float32)}
+    raise ValueError(t)
+
+
+def init_cache(cfg: ModelConfig, batch: int, t_max: int) -> dict:
+    dtype = cfg.param_dtype
+    unit, reps, tail = pattern_unit(cfg)
+    unit_caches = []
+    for t in unit:
+        if reps > 0:
+            c = _block_cache(t, cfg, batch, t_max, dtype)
+            unit_caches.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (reps,) + x.shape), c))
+    return {"unit": unit_caches,
+            "tail": [_block_cache(t, cfg, batch, t_max, dtype) for t in tail]}
+
+
+# ----------------------------------------------------------------------------
+# forward
+# ----------------------------------------------------------------------------
+
+def _sliding_cache_update(cache_kv, k_new, pos, window):
+    """Ring-buffer write for local-attention caches (bounded memory at 500k);
+    ``pos`` may be scalar or per-row [B] (serving)."""
+    slot = pos % cache_kv.shape[1]
+    if pos.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(cache_kv, k_new, slot,
+                                                   axis=1)
+    return jax.vmap(lambda c, n, p:
+                    jax.lax.dynamic_update_slice_in_dim(c, n, p, axis=0)
+                    )(cache_kv, k_new, slot)
+
+
+def _block_apply(t: str, bp: dict, x, cfg: ModelConfig, *, positions,
+                 cache=None, pos=None, kv_chunk=0):
+    h = cm.apply_norm(x, bp["norm1"], cfg.norm)
+    new_cache = None
+    if t in ("A", "L"):
+        if cache is not None:
+            # local layers always use a ring (windowed) cache in decode —
+            # bounded memory even at 500k context.
+            acache = {"k": cache["k"], "v": cache["v"], "pos": pos,
+                      "ring": bool(t == "L" and cfg.sliding_window)}
+            h, kv = _attn_cached(bp["attn"], h, cfg, t, acache, kv_chunk)
+            new_cache = {"k": kv["k"], "v": kv["v"]}
+        else:
+            h, _ = cm.attention_apply(bp["attn"], h, cfg, positions=positions,
+                                      layer_kind=t, cache=None,
+                                      kv_chunk=kv_chunk)
+    elif t == "R":
+        h, new_cache = rglru_apply(bp["rec"], h, cfg, cache)
+    elif t == "M":
+        h, new_cache = mamba_apply(bp["mixer"], h, cfg, cache)
+        return x + h, new_cache       # mamba block: mixer only
+    x = x + h
+    h = cm.apply_norm(x, bp["norm2"], cfg.norm)
+    if cfg.moe is not None:
+        h = moe_apply(bp["ffn"], h, cfg)
+    else:
+        h = cm.mlp_apply(bp["ffn"], h, cfg.mlp)
+    return x + h, new_cache
+
+
+def _attn_cached(p, x, cfg, layer_kind, cache, kv_chunk):
+    """Decode-path attention with either a full or ring (windowed) cache."""
+    ring = cache.pop("ring", False)
+    cpos = cache["pos"]
+    qpos = cpos[None] if cpos.ndim == 0 else cpos[:, None]
+    if not ring:
+        return cm.attention_apply(p, x, cfg, positions=qpos,
+                                  layer_kind=layer_kind, cache=cache,
+                                  kv_chunk=kv_chunk)
+    # ring cache: positions of slots are pos - window + 1 .. pos (mod window)
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+    pos = cache["pos"]
+    win = cache["k"].shape[1]
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, s, hkv, hd)
+    q = cm.rope(q, qpos, cfg.rope_theta)
+    k = cm.rope(k, qpos, cfg.rope_theta)
+    ck = _sliding_cache_update(cache["k"], k, pos, win)
+    cv = _sliding_cache_update(cache["v"], v, pos, win)
+    slots = jnp.arange(win)
+    if pos.ndim == 0:
+        slot_pos = pos - ((pos - slots) % win)  # absolute position per slot
+        valid = (slot_pos >= 0) & (slot_pos <= pos)
+        out = cm.cached_attention(q, ck, cv, pos, slot_pos, valid, 0, cfg)
+    else:
+        slot_pos = pos[:, None] - ((pos[:, None] - slots[None, :]) % win)
+        valid = (slot_pos >= 0) & (slot_pos <= pos[:, None])
+        # per-row kv positions: fold into the mask (window already enforced
+        # by the ring size); use row-wise attention via the generic mask path
+        out = _ring_attention_per_row(q, ck, cv, slot_pos, valid, cfg)
+    y = out.reshape(b, s, h * hd) @ p["wo"]
+    return y, {"k": ck, "v": cv}
+
+
+def _ring_attention_per_row(q, ck, cv, slot_pos, valid, cfg):
+    """Ring-cache decode attention with per-row slot positions (serving)."""
+    b, sq, h, d = q.shape
+    hkv = ck.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, d) * (d ** -0.5)
+    s = jnp.einsum("bqhgd,bthd->bhgqt", qg.astype(ck.dtype), ck)
+    s = s.astype(jnp.float32)
+    s = jnp.where(valid[:, None, None, None, :], s, jnp.float32(-1e30))
+    p_attn = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqt,bthd->bqhgd", p_attn.astype(cv.dtype), cv)
+    return out.reshape(b, sq, h, d)
+
+
+def _scan_blocks(params, x, cfg, *, positions, caches=None, pos=None,
+                 kv_chunk=0, remat=True):
+    unit, reps, tail = pattern_unit(cfg)
+
+    if reps > 0:
+        def body(carry, xs):
+            h = carry
+            if caches is None:
+                unit_p = xs
+                new_cs = None
+                for t, bp in zip(unit, unit_p):
+                    h, _ = _block_apply(t, bp, h, cfg, positions=positions,
+                                        kv_chunk=kv_chunk)
+            else:
+                unit_p, unit_c = xs
+                new_cs = []
+                for t, bp, c in zip(unit, unit_p, unit_c):
+                    h, nc = _block_apply(t, bp, h, cfg, positions=positions,
+                                         cache=c, pos=pos, kv_chunk=kv_chunk)
+                    new_cs.append(nc)
+            return h, new_cs
+
+        if remat and cfg.remat != "none":
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if cfg.remat == "dots" else None)
+            body = jax.checkpoint(body, policy=policy)
+        xs = (tuple(params["unit"]) if caches is None
+              else (tuple(params["unit"]), tuple(caches["unit"])))
+        x, new_unit_caches = jax.lax.scan(body, x, xs)
+    else:
+        new_unit_caches = None
+
+    new_tail = []
+    for i, t in enumerate(tail):
+        c = caches["tail"][i] if caches is not None else None
+        x, nc = _block_apply(t, params["tail"][i], x, cfg, positions=positions,
+                             cache=c, pos=pos, kv_chunk=kv_chunk)
+        new_tail.append(nc)
+    new_caches = (None if caches is None
+                  else {"unit": new_unit_caches, "tail": new_tail})
+    return x, new_caches
+
+
+def forward(params, tokens, cfg: ModelConfig, *, patch_embeds=None,
+            kv_chunk: int = 0, remat: bool = True):
+    """Training / prefill forward → logits [B, S(+P), V]."""
+    x = cm.embed_apply(params["embed"], tokens)
+    if cfg.n_patches and patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+        x = shard(x, "batch", "seq", "d_model")
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    x, _ = _scan_blocks(params, x, cfg, positions=positions,
+                        kv_chunk=kv_chunk, remat=remat)
+    x = cm.apply_norm(x, params["final_norm"], cfg.norm)
+    return cm.logits_apply(params["embed"], x, cfg)
+
+
+def decode_step(params, token, caches, pos, cfg: ModelConfig):
+    """One serving decode step: ``token [B, 1]`` + caches at ``pos`` →
+    (logits [B, 1, V], new caches).  KV caches are read through the Medusa
+    port-major layout engine (cfg.kv_layout)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[None] if pos.ndim == 0 else pos[:, None]
+    x = cm.embed_apply(params["embed"], token)
+    x, new_caches = _scan_blocks(params, x, cfg, positions=positions,
+                                 caches=caches, pos=pos, remat=False)
+    x = cm.apply_norm(x, params["final_norm"], cfg.norm)
+    return cm.logits_apply(params["embed"], x, cfg), new_caches
+
+
+def prefill(params, tokens, cfg: ModelConfig, t_max: int, *,
+            patch_embeds=None, kv_chunk: int = 0):
+    """Prefill: forward pass that also installs KV/state caches.
+
+    For the dry-run's ``prefill_32k`` cells we lower this function; caches are
+    written line-major (time-contiguous wide lines — the DRAM-friendly layout
+    the Medusa read network then re-banks during decode)."""
+    b = tokens.shape[0]
+    caches = init_cache(cfg, b, t_max)
+    x = cm.embed_apply(params["embed"], tokens)
+    if cfg.n_patches and patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+
+    unit, reps, tail = pattern_unit(cfg)
+
+    def fill_block(t, bp, c, h):
+        hn = cm.apply_norm(h, bp["norm1"], cfg.norm)
+        if t in ("A", "L"):
+            out, kv = cm.attention_apply(bp["attn"], hn, cfg,
+                                         positions=positions, layer_kind=t,
+                                         cache=None, kv_chunk=kv_chunk)
+            length = c["k"].shape[1]
+            if length >= s:
+                ck = jax.lax.dynamic_update_slice_in_dim(c["k"], kv["k"], 0, 1)
+                cv = jax.lax.dynamic_update_slice_in_dim(c["v"], kv["v"], 0, 1)
+            else:
+                # windowed layer: keep last `length` positions, placed at ring
+                # slots p % length — a barrel rotation of the window (the
+                # paper's rotation unit applied on the time axis).
+                ck = jnp.roll(kv["k"][:, s - length:], s % length, axis=1)
+                cv = jnp.roll(kv["v"][:, s - length:], s % length, axis=1)
+            nc = {"k": ck, "v": cv}
+            h = h + out
+            hn = cm.apply_norm(h, bp["norm2"], cfg.norm)
+            ffn = (moe_apply(bp["ffn"], hn, cfg) if cfg.moe is not None
+                   else cm.mlp_apply(bp["ffn"], hn, cfg.mlp))
+            return h + ffn, nc
+        # recurrent/ssm: run the full-sequence form, then rebuild the final
+        # state by a single-step replay of the last token (cheap, exact).
+        if t == "R":
+            out, _ = rglru_apply(bp["rec"], hn, cfg, None)
+            h2 = h + out
+            # final state via one cached step over the last position
+            nc = _recover_rec_state(bp, hn, cfg, t)
+            hn2 = cm.apply_norm(h2, bp["norm2"], cfg.norm)
+            ffn = (moe_apply(bp["ffn"], hn2, cfg) if cfg.moe is not None
+                   else cm.mlp_apply(bp["ffn"], hn2, cfg.mlp))
+            return h2 + ffn, nc
+        out, _ = mamba_apply(bp["mixer"], hn, cfg, None)
+        nc = _recover_rec_state(bp, hn, cfg, t)
+        return h + out, nc
+
+    if reps > 0:
+        def body(carry, xs):
+            h = carry
+            up, uc = xs
+            ncs = []
+            for t, bp, c in zip(unit, up, uc):
+                h, nc = fill_block(t, bp, c, h)
+                ncs.append(nc)
+            return h, ncs
+        body = jax.checkpoint(body) if cfg.remat != "none" else body
+        x, new_unit = jax.lax.scan(body, x,
+                                   (tuple(params["unit"]), tuple(caches["unit"])))
+    else:
+        new_unit = None
+    new_tail = []
+    for i, t in enumerate(tail):
+        x, nc = fill_block(t, params["tail"][i], caches["tail"][i], x)
+        new_tail.append(nc)
+    x = cm.apply_norm(x, params["final_norm"], cfg.norm)
+    logits = cm.logits_apply(params["embed"], x[:, -1:], cfg)
+    return logits, {"unit": new_unit, "tail": new_tail}
+
+
+def _recover_rec_state(bp, hn, cfg, t):
+    """Recompute the final recurrent state for cache installation by running
+    the (associative-scan / chunked) path on the full sequence and taking the
+    last step through the cached single-step form."""
+    b = hn.shape[0]
+    if t == "R":
+        seqlen = hn.shape[1]
+        # run the associative scan and keep h_T + the conv tail window
+        from repro.models.rglru import _gates, _causal_conv  # noqa
+        r = cfg.rglru
+        w = r.lru_width or cfg.d_model
+        branches = hn @ bp["rec"]["w_branch"]
+        xb, _ = jnp.split(branches, [w], axis=-1)
+        conv_state = jnp.concatenate(
+            [jnp.zeros((b, max(r.conv_width - 1 - seqlen, 0), w), hn.dtype),
+             xb[:, -min(r.conv_width - 1, seqlen):]], axis=1)
+        xbc, _ = _causal_conv(xb, bp["rec"]["conv_w"], bp["rec"]["conv_b"])
+        a, bb = _gates(bp["rec"], xbc, cfg)
+        def combine(lhs, rhs):
+            al, bl = lhs
+            ar, br = rhs
+            return al * ar, ar * bl + br
+        _, hseq = jax.lax.associative_scan(combine, (a, bb), axis=1)
+        return {"conv": conv_state, "h": hseq[:, -1]}
+    # mamba: recompute chunk states and keep the final one
+    from repro.models.mamba2 import _project, _causal_conv as mconv
+    s = cfg.ssm
+    x, z, bmat, cmat, dt, d_in, nh = _project(bp["mixer"], hn, cfg)
+    conv_in = jnp.concatenate([x, bmat, cmat], axis=-1)
+    seqlen = hn.shape[1]
+    conv_state = jnp.concatenate(
+        [jnp.zeros((b, max(s.conv_width - 1 - seqlen, 0), conv_in.shape[-1]),
+                   conv_in.dtype),
+         conv_in[:, -min(s.conv_width - 1, seqlen):]], axis=1)
+    conv_out, _ = mconv(conv_in, bp["mixer"]["conv_w"], bp["mixer"]["conv_b"])
+    x, bmat, cmat = jnp.split(conv_out, [d_in, d_in + s.d_state], axis=-1)
+    xh = x.reshape(b, seqlen, nh, s.head_dim).astype(jnp.float32)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + bp["mixer"]["dt_bias"])
+    a = -jnp.exp(bp["mixer"]["a_log"])
+    da = jnp.exp(dtf * a)
+    log_da = jnp.log(jnp.maximum(da, 1e-30))
+    cum = jnp.cumsum(log_da, axis=1)
+    decay_to_end = jnp.exp(cum[:, -1:][:, 0][:, None] - cum)
+    state = jnp.einsum("bjh,bjh,bjn,bjhp->bhpn", decay_to_end, dtf,
+                       bmat.astype(jnp.float32), xh)
+    return {"conv": conv_state, "state": state}

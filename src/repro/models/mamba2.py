@@ -1,0 +1,202 @@
+"""Mamba-2 (SSD — state-space duality) blocks, arXiv:2405.21060.
+
+Training uses the chunked SSD algorithm: the sequence is split into chunks of
+``Q``; within a chunk the dual quadratic (attention-like) form computes local
+interactions, while a ``lax.scan`` over chunks carries the [H, P, N] state
+with per-chunk decay — sub-quadratic overall and scan-friendly for sharding.
+Decode is the O(1) recurrence ``h = dA h + dt B x``.
+
+The Medusa mapping: SSD state banks are deep-narrow (per-head [P, N] banks)
+fed by wide line-major chunk updates — the interconnect's banked-buffer
+pattern (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, trunc_normal, rms_norm
+from repro.parallel.sharding import shard
+
+
+def mamba_params(key, cfg, dtype) -> dict:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        # separate projections so each can carry its own sharding:
+        # x/z over the (TP-sharded) inner dim, B/C/dt replicated (small).
+        "w_xz": dense_init(ks[0], cfg.d_model, 2 * d_in, dtype),
+        "w_bc": dense_init(ks[3], cfg.d_model, 2 * s.d_state, dtype),
+        "w_dt": dense_init(ks[4], cfg.d_model, nh, dtype),
+        "conv_w": trunc_normal(ks[1], (s.conv_width, d_in + 2 * s.d_state),
+                               dtype, 0.1),
+        "conv_b": jnp.zeros((d_in + 2 * s.d_state,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "gate_norm": jnp.zeros((d_in,), dtype),
+        "w_out": dense_init(ks[2], d_in, cfg.d_model, dtype),
+    }
+
+
+def _project(p, xin, cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    xz = xin @ p["w_xz"]
+    x, z = jnp.split(xz, [d_in], axis=-1)
+    bc = xin @ p["w_bc"]
+    bmat, cmat = jnp.split(bc, [s.d_state], axis=-1)
+    dt = xin @ p["w_dt"]
+    return x, z, bmat, cmat, dt, d_in, nh
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv1d, width K.  ``x [B,S,C]``, ``w [K,C]``.
+    With ``state [B,K-1,C]`` performs streaming conv and returns new state."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(x[:, : k - 1])
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k)) + b
+    new_state = xp[:, -(k - 1):] if k > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def mamba_apply(p, xin: jax.Array, cfg, cache=None):
+    """One Mamba-2 mixer.  Training/prefill: ``cache None``; decode: cache =
+    {"conv": [B,K-1,C], "state": [B,H,P,N]} and S must be 1."""
+    s = cfg.ssm
+    b, seq, _ = xin.shape
+    x, z, bmat, cmat, dt, d_in, nh = _project(p, xin, cfg)
+    conv_in = jnp.concatenate([x, bmat, cmat], axis=-1)
+
+    if cache is None:
+        conv_out, _ = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    else:
+        conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                          cache["conv"])
+    x, bmat, cmat = jnp.split(conv_out, [d_in, d_in + s.d_state], axis=-1)
+    xh = x.reshape(b, seq, nh, s.head_dim)
+    xh = shard(xh, "batch", "seq", "inner", None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])       # [B,S,H]
+    a = -jnp.exp(p["a_log"])                                          # [H]
+    da = jnp.exp(dt * a)                                              # decay
+
+    if cache is None:
+        y = _ssd_chunked(xh, dt, da, bmat, cmat, s.chunk)
+        new_cache = None
+    else:
+        h = cache["state"]                                            # [B,H,P,N]
+        xd = xh[:, 0] * dt[:, 0, :, None]                             # [B,H,P]
+        hb = jnp.einsum("bhp,bn->bhpn", xd.astype(jnp.float32),
+                        bmat[:, 0].astype(jnp.float32))
+        h = h * da[:, 0, :, None, None] + hb
+        y = jnp.einsum("bhpn,bn->bhp", h, cmat[:, 0].astype(jnp.float32))
+        y = y[:, None].astype(xin.dtype)
+        new_cache = {"conv": new_conv, "state": h}
+
+    y = y.reshape(b, seq, nh, s.head_dim) + (p["d_skip"][:, None]
+                                             * xh.astype(jnp.float32)
+                                             ).astype(y.dtype)
+    y = y.reshape(b, seq, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"])                  # gated norm
+    out = y @ p["w_out"]
+    return shard(out, "batch", "seq", "d_model"), new_cache
+
+
+def _ssd_chunked(xh, dt, da, bmat, cmat, q):
+    """Chunked SSD scan.  ``xh [B,S,H,P]``, ``dt/da [B,S,H]``,
+    ``bmat/cmat [B,S,N]`` → ``y [B,S,H,P]`` (fp32 inside)."""
+    b, seq, h, p_dim = xh.shape
+    n = bmat.shape[-1]
+    q = min(q, seq)
+    orig_seq = seq
+    if seq % q:
+        # pad to a chunk multiple: dt=0 → padded positions contribute nothing
+        # to states; outputs past orig_seq are sliced away.
+        pad = q - seq % q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        seq = seq + pad
+    c = seq // q
+    f32 = jnp.float32
+    xc = xh.reshape(b, c, q, h, p_dim).astype(f32)
+    dtc = dt.reshape(b, c, q, h)
+    dac = da.reshape(b, c, q, h)
+    bc = bmat.reshape(b, c, q, n).astype(f32)
+    cc = cmat.reshape(b, c, q, n).astype(f32)
+
+    log_da = jnp.log(jnp.maximum(dac, 1e-30))
+    cum = jnp.cumsum(log_da, axis=2)                                  # [B,C,Q,H]
+    total = cum[:, :, -1]                                             # [B,C,H]
+
+    # intra-chunk (dual quadratic form): L[i,j] = exp(cum_i - cum_j) for i>=j.
+    # Mask BEFORE exp: the i<j entries have positive exponents whose exp
+    # overflows, and where(mask, inf, 0) still propagates NaN in the bwd.
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]                # [B,C,Q,Q,H]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.exp(jnp.where(mask[None, None, :, :, None], li, -1e30))
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)                    # [B,C,Q,Q]
+    y_intra = jnp.einsum("bcij,bcijh,bcjh,bcjhp->bcihp",
+                         scores, l_mat, dtc, xc)
+
+    # chunk states: S_c = sum_j exp(total - cum_j) dt_j B_j ⊗ x_j
+    decay_to_end = jnp.exp(total[:, :, None] - cum)                   # [B,C,Q,H]
+    states = jnp.einsum("bcjh,bcjh,bcjn,bcjhp->bchnp",
+                        decay_to_end, dtc, bc, xc)                    # [B,C,H,N,P]
+
+    # inter-chunk recurrence over chunk axis
+    def step(carry, inp):
+        s_prev = carry                                                # [B,H,N,P]
+        s_new, tot = inp                                              # [B,H,N,P],[B,H]
+        s_next = s_prev * jnp.exp(tot)[:, :, None, None] + s_new
+        return s_next, s_prev
+
+    init = jnp.zeros((b, h, n, p_dim), f32)
+    _, s_prevs = jax.lax.scan(
+        step, init, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total, 1, 0)))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)                             # [B,C,H,N,P]
+
+    # inter-chunk contribution: decay from chunk start then contract with C
+    decay_from_start = jnp.exp(cum)                                   # [B,C,Q,H]
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp",
+                         cc, decay_from_start, s_prevs)
+    y = (y_intra + y_inter).reshape(b, seq, h, p_dim)[:, :orig_seq]
+    return y.astype(xh.dtype)
+
+
+def mamba_sequential_ref(p, xin, cfg):
+    """Sequential-recurrence oracle for the chunked SSD path (tests only)."""
+    s = cfg.ssm
+    b, seq, _ = xin.shape
+    x, z, bmat, cmat, dt, d_in, nh = _project(p, xin, cfg)
+    conv_out, _ = _causal_conv(jnp.concatenate([x, bmat, cmat], -1),
+                               p["conv_w"], p["conv_b"])
+    x, bmat, cmat = jnp.split(conv_out, [d_in, d_in + s.d_state], axis=-1)
+    xh = x.reshape(b, seq, nh, s.head_dim).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt * a)
+    h = jnp.zeros((b, nh, s.head_dim, s.d_state), jnp.float32)
+    ys = []
+    for t in range(seq):
+        hb = jnp.einsum("bhp,bn->bhpn", xh[:, t] * dt[:, t, :, None],
+                        bmat[:, t].astype(jnp.float32))
+        h = h * da[:, t, :, None, None] + hb
+        ys.append(jnp.einsum("bhpn,bn->bhp", h, cmat[:, t].astype(jnp.float32)))
+    y = jnp.stack(ys, axis=1)
+    y = y + p["d_skip"][:, None] * xh
+    y = y.reshape(b, seq, d_in).astype(xin.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"])
+    return y @ p["w_out"]

@@ -1,0 +1,107 @@
+"""Mixture-of-Experts FFN with capacity-based dispatch.
+
+Ports-as-experts is the Medusa mapping (DESIGN.md §3.2): the router evenly
+partitions token bandwidth across experts with a *static* capacity (paper
+observation 1 — even bandwidth partitioning), and the expert all-to-all can
+run either on XLA's native all-to-all (the "crossbar") or on the Medusa ring
+schedule (N-1 ``ppermute`` rotations — ``repro/parallel/collectives.py``).
+
+Dispatch is sort-based (no [T, E, C] one-hot): tokens are ranked within their
+expert by a stable sort over assignments; tokens past capacity are dropped
+(their residual passes through — standard capacity-factor semantics).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+from repro.parallel.sharding import shard
+
+
+def moe_params(key, cfg, dtype) -> dict:
+    m = cfg.moe
+    ks = jax.random.split(key, 4)
+    e, d, f = m.n_experts_padded, cfg.d_model, m.expert_d_ff
+    return {
+        "router": dense_init(ks[0], d, m.n_experts, jnp.float32),
+        "w_gate": jax.vmap(lambda k: dense_init(k, d, f, dtype))(
+            jax.random.split(ks[1], e)),
+        "w_up": jax.vmap(lambda k: dense_init(k, d, f, dtype))(
+            jax.random.split(ks[2], e)),
+        "w_out": jax.vmap(lambda k: dense_init(k, f, d, dtype))(
+            jax.random.split(ks[3], e)),
+    }
+
+
+def moe_apply(p, x: jax.Array, cfg) -> jax.Array:
+    """``x [B, S, d]`` → MoE FFN output, top-k routing with capacity.
+
+    With ``moe.pad_to`` set, the expert dim is padded with dead experts the
+    router can never select (logits only cover the real experts); capacity is
+    computed over real experts so semantics are unchanged — only the EP
+    sharding divisibility improves.
+    """
+    m = cfg.moe
+    e_pad = m.n_experts_padded
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])               # [T, E_real]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)                  # [T, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    a = top_e.reshape(-1)                                         # [T*k]
+    tok = jnp.arange(t * m.top_k) // m.top_k
+    # rank within expert via stable sort (even static partition -> capacity)
+    order = jnp.argsort(a, stable=True)
+    a_sorted = a[order]
+    first = jnp.searchsorted(a_sorted, a_sorted, side="left")
+    rank_sorted = jnp.arange(t * m.top_k) - first
+    rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+    cap = int(t * m.top_k * m.capacity_factor / m.n_experts) or 1
+    keep = rank < cap
+    slot = jnp.where(keep, a * cap + rank, e_pad * cap)           # drop→OOB
+
+    # Dispatch moves PAYLOAD with gathers only: the scatter touches 4-byte
+    # indices, never the d-wide activations (a payload scatter lowers to
+    # full-width routing — the crossbar again; see EXPERIMENTS.md §Perf).
+    inv = jnp.full((e_pad * cap,), t * m.top_k, jnp.int32)
+    inv = inv.at[slot].set(jnp.arange(t * m.top_k, dtype=jnp.int32),
+                           mode="drop")                           # [E*C]
+    slot_valid = inv < t * m.top_k
+    src_tok = jnp.clip(inv // m.top_k, 0, t - 1)
+    buf = jnp.where(slot_valid[:, None], jnp.take(xt, src_tok, axis=0), 0)
+    buf = buf.reshape(e_pad, cap, d)
+    buf = shard(buf, "experts", "expert_cap", "d_model")
+
+    # expert FFN (swiglu), experts sharded over the model axis (EP)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    h = shard(h, "experts", "expert_cap", None)
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_out"])
+    y = shard(y, "experts", "expert_cap", "d_model").reshape(e_pad * cap, d)
+
+    # combine: gather per assignment, weight, and reduce over the (static,
+    # consecutive) top-k axis by reshape+sum — no scatter-add.
+    gathered = jnp.where(keep[:, None],
+                         jnp.take(y, jnp.clip(slot, 0, e_pad * cap - 1),
+                                  axis=0), 0)
+    w = top_p.reshape(-1)[:, None].astype(x.dtype)
+    out = (gathered * w).reshape(t, m.top_k, d).sum(axis=1)
+    return out.reshape(b, s, d)
+
+
+def aux_load_balance_loss(p, x: jax.Array, cfg) -> jax.Array:
+    """Switch-style load-balance auxiliary loss (fraction x probability)."""
+    m = cfg.moe
+    t = x.shape[0] * x.shape[1]
+    logits = x.reshape(t, -1).astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_e = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top_e, m.n_experts), axis=0)
+    imp = jnp.mean(probs, axis=0)
+    return m.n_experts * jnp.sum(frac * imp)

@@ -1,0 +1,99 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The recurrence ``h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)`` with
+``a_t = exp(-c * softplus(Lambda) * r_t)`` is linear in ``h``, so training
+uses ``jax.lax.associative_scan`` over the sequence (log-depth, shardable);
+decode is the single-step recurrence on an O(1) state.
+
+Block structure (Griffin recurrent block): input projections to two branches
+of width ``lru_width``; branch 1 passes a short causal conv then the RG-LRU;
+branch 2 is a GeLU gate; merged output projects back to ``d_model``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, trunc_normal
+from repro.models.mamba2 import _causal_conv
+from repro.parallel.sharding import shard
+
+
+def rglru_params(key, cfg, dtype) -> dict:
+    r = cfg.rglru
+    w = r.lru_width or cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "w_branch": dense_init(ks[0], cfg.d_model, 2 * w, dtype),
+        "conv_w": trunc_normal(ks[1], (r.conv_width, w), dtype, 0.1),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": dense_init(ks[2], w, w, jnp.float32),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": dense_init(ks[3], w, w, jnp.float32),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        # Lambda init so that a^c = sigmoid(lam)^c spans ~(0.9, 0.999)
+        "lam": jnp.linspace(2.0, 6.0, w).astype(jnp.float32),
+        "w_out": dense_init(ks[4], w, cfg.d_model, dtype),
+    }
+
+
+def _gates(p, xb, cfg):
+    r_gate = jax.nn.sigmoid(xb.astype(jnp.float32) @ p["w_a"] + p["b_a"])
+    i_gate = jax.nn.sigmoid(xb.astype(jnp.float32) @ p["w_i"] + p["b_i"])
+    log_a = -cfg.rglru.c * jax.nn.softplus(p["lam"]) * r_gate
+    a = jnp.exp(log_a)
+    gated_x = i_gate * xb.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+    return a, b
+
+
+def rglru_apply(p, xin: jax.Array, cfg, cache=None):
+    """One Griffin recurrent block.  Decode: cache = {"conv": [B,K-1,W],
+    "h": [B,W]} with S == 1."""
+    b, seq, _ = xin.shape
+    r = cfg.rglru
+    w = r.lru_width or cfg.d_model
+    branches = xin @ p["w_branch"]
+    xb, gate = jnp.split(branches, [w], axis=-1)
+    xb = shard(xb, "batch", "seq", "inner")
+
+    if cache is None:
+        xb, _ = _causal_conv(xb, p["conv_w"], p["conv_b"])
+        a, bb = _gates(p, xb, cfg)
+        # associative scan over the sequence: (a, b) ∘ (a', b') = (aa', a'b + b')
+        def combine(lhs, rhs):
+            al, bl = lhs
+            ar, br = rhs
+            return al * ar, ar * bl + br
+        _, h = jax.lax.associative_scan(combine, (a, bb), axis=1)
+        new_cache = None
+    else:
+        xb, new_conv = _causal_conv(xb, p["conv_w"], p["conv_b"], cache["conv"])
+        a, bb = _gates(p, xb, cfg)
+        h = a[:, 0] * cache["h"] + bb[:, 0]
+        new_cache = {"conv": new_conv, "h": h}
+        h = h[:, None]
+
+    out = (h.astype(xin.dtype) * jax.nn.gelu(gate, approximate=True))
+    out = out @ p["w_out"]
+    return shard(out, "batch", "seq", "d_model"), new_cache
+
+
+def rglru_sequential_ref(p, xin, cfg):
+    """Step-by-step oracle for the associative-scan path (tests only)."""
+    b, seq, _ = xin.shape
+    r = cfg.rglru
+    w = r.lru_width or cfg.d_model
+    branches = xin @ p["w_branch"]
+    xb, gate = jnp.split(branches, [w], axis=-1)
+    xb, _ = _causal_conv(xb, p["conv_w"], p["conv_b"])
+    a, bb = _gates(p, xb, cfg)
+    h = jnp.zeros((b, w), jnp.float32)
+    hs = []
+    for t in range(seq):
+        h = a[:, t] * h + bb[:, t]
+        hs.append(h)
+    h = jnp.stack(hs, axis=1)
+    out = h.astype(xin.dtype) * jax.nn.gelu(gate, approximate=True)
+    return out @ p["w_out"]

@@ -1,0 +1,211 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356) on the shared substrate.
+
+Per the assignment, the conv frontend is a STUB: ``input_specs`` supplies
+precomputed frame embeddings ``[B, encoder_seq, d_model]`` (the output the
+two-conv downsampler would produce).  Positions are sinusoidal, attention is
+non-rotary, norms follow ``cfg.norm`` ("ln" for whisper).
+
+Decode uses per-layer self-attention KV caches (line-major, read through the
+Medusa layout engine like every other arch) plus precomputed cross-attention
+K/V from the encoder output.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.parallel.sharding import shard
+
+
+def _enc_block_params(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "norm1": cm.init_norm(ks[0], cfg.d_model, dtype, cfg.norm),
+        "attn": cm.attention_block_params(ks[1], cfg, dtype),
+        "norm2": cm.init_norm(ks[2], cfg.d_model, dtype, cfg.norm),
+        "ffn": cm.mlp_params(ks[3], cfg.d_model, cfg.d_ff, cfg.mlp, dtype),
+    }
+
+
+def _dec_block_params(key, cfg, dtype):
+    ks = jax.random.split(key, 6)
+    return {
+        "norm1": cm.init_norm(ks[0], cfg.d_model, dtype, cfg.norm),
+        "attn": cm.attention_block_params(ks[1], cfg, dtype),
+        "norm_x": cm.init_norm(ks[2], cfg.d_model, dtype, cfg.norm),
+        "xattn": cm.attention_block_params(ks[3], cfg, dtype),
+        "norm2": cm.init_norm(ks[4], cfg.d_model, dtype, cfg.norm),
+        "ffn": cm.mlp_params(ks[5], cfg.d_model, cfg.d_ff, cfg.mlp, dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = cfg.param_dtype
+    k_emb, k_enc, k_dec, k_f1, k_f2 = jax.random.split(key, 5)
+    return {
+        "embed": cm.embed_params(k_emb, cfg, dtype),
+        "encoder": jax.vmap(lambda k: _enc_block_params(k, cfg, dtype))(
+            jax.random.split(k_enc, cfg.encoder_layers)),
+        "decoder": jax.vmap(lambda k: _dec_block_params(k, cfg, dtype))(
+            jax.random.split(k_dec, cfg.n_layers)),
+        "enc_norm": cm.init_norm(k_f1, cfg.d_model, dtype, cfg.norm),
+        "final_norm": cm.init_norm(k_f2, cfg.d_model, dtype, cfg.norm),
+    }
+
+
+def _self_attn(bp, x, cfg, positions, causal, cache=None, kv_chunk=0):
+    h = cm.apply_norm(x, bp["norm1"], cfg.norm)
+    if cache is None:
+        out, kv = cm.attention_apply(bp["attn"], h, cfg, positions=positions,
+                                     layer_kind="A", apply_rope=False,
+                                     causal=causal, kv_chunk=kv_chunk)
+    else:
+        out, kv = cm.attention_apply(bp["attn"], h, cfg,
+                                     positions=cache["pos"][None],
+                                     layer_kind="A", cache=cache,
+                                     apply_rope=False)
+    return x + out, kv
+
+
+def _cross_attn(bp, x, cfg, enc_kv):
+    """Cross-attention with precomputed encoder K/V (port-major streams)."""
+    h = cm.apply_norm(x, bp["norm_x"], cfg.norm)
+    b, s, _ = h.shape
+    hd = cfg.resolved_head_dim
+    q = (h @ bp["xattn"]["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k_pm, v_pm = enc_kv                       # [B, Hkv, S_enc, D] port-major
+    kv_pos = jnp.arange(k_pm.shape[2])
+    valid = jnp.ones_like(kv_pos, dtype=bool)
+    out = cm._decode_attention(q, k_pm, v_pm, jnp.int32(0), kv_pos, valid, 0)
+    y = out.reshape(b, s, cfg.n_heads * hd) @ bp["xattn"]["wo"]
+    return x + y
+
+
+def _mlp(bp, x, cfg):
+    h = cm.apply_norm(x, bp["norm2"], cfg.norm)
+    return x + cm.mlp_apply(bp["ffn"], h, cfg.mlp)
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Encoder over stub frame embeddings [B, S_enc, D]."""
+    x = frames.astype(cfg.param_dtype)
+    x = x + cm.sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+    x = shard(x, "batch", "frames", "d_model")
+    positions = jnp.arange(x.shape[1])
+
+    def body(h, bp):
+        h, _ = _self_attn(bp, h, cfg, positions, causal=False)
+        h = _mlp(bp, h, cfg)
+        return h, None
+
+    body = jax.checkpoint(body) if cfg.remat != "none" else body
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return cm.apply_norm(x, params["enc_norm"], cfg.norm)
+
+
+def _enc_cross_kv(params, enc_out, cfg):
+    """Precompute per-decoder-layer cross K/V, port-major (medusa layout)."""
+    b, s_enc, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+
+    def per_layer(bp):
+        k = (enc_out @ bp["xattn"]["wk"]).reshape(b, s_enc, cfg.n_kv_heads, hd)
+        v = (enc_out @ bp["xattn"]["wv"]).reshape(b, s_enc, cfg.n_kv_heads, hd)
+        return cm._kv_port_major(k, cfg), cm._kv_port_major(v, cfg)
+
+    return jax.vmap(per_layer, in_axes=0)(params["decoder"])
+
+
+def forward(params, tokens, frames, cfg: ModelConfig,
+            kv_chunk: int = 0) -> jax.Array:
+    """Training forward: encode frames, decode tokens → logits."""
+    enc_out = encode(params, frames, cfg)
+    cross_kv = _enc_cross_kv(params, enc_out, cfg)
+    x = cm.embed_apply(params["embed"], tokens)
+    s = x.shape[1]
+    x = x + cm.sinusoidal_positions(s, cfg.d_model).astype(x.dtype)
+    positions = jnp.arange(s)
+
+    def body(h, xs):
+        bp, ckv = xs
+        h, _ = _self_attn(bp, h, cfg, positions, causal=True,
+                          kv_chunk=kv_chunk)
+        h = _cross_attn(bp, h, cfg, ckv)
+        h = _mlp(bp, h, cfg)
+        return h, None
+
+    body = jax.checkpoint(body) if cfg.remat != "none" else body
+    x, _ = jax.lax.scan(body, x, (params["decoder"], cross_kv))
+    x = cm.apply_norm(x, params["final_norm"], cfg.norm)
+    return cm.logits_apply(params["embed"], x, cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, t_max: int) -> dict:
+    hd = cfg.resolved_head_dim
+    dt = cfg.param_dtype
+    l = cfg.n_layers
+    return {
+        "k": jnp.zeros((l, batch, t_max, cfg.n_kv_heads, hd), dt),
+        "v": jnp.zeros((l, batch, t_max, cfg.n_kv_heads, hd), dt),
+        "cross_k": jnp.zeros((l, batch, cfg.n_kv_heads, cfg.encoder_seq, hd), dt),
+        "cross_v": jnp.zeros((l, batch, cfg.n_kv_heads, cfg.encoder_seq, hd), dt),
+    }
+
+
+def prefill(params, tokens, frames, cfg: ModelConfig, t_max: int):
+    """Encode + decoder prefill; installs self- and cross-attention caches."""
+    enc_out = encode(params, frames, cfg)
+    cross_kv = _enc_cross_kv(params, enc_out, cfg)
+    b = tokens.shape[0]
+    x = cm.embed_apply(params["embed"], tokens)
+    s = x.shape[1]
+    x = x + cm.sinusoidal_positions(s, cfg.d_model).astype(x.dtype)
+    positions = jnp.arange(s)
+    hd = cfg.resolved_head_dim
+
+    def body(h, xs):
+        bp, ckv = xs
+        hn = cm.apply_norm(h, bp["norm1"], cfg.norm)
+        out, kv = cm.attention_apply(bp["attn"], hn, cfg, positions=positions,
+                                     layer_kind="A", apply_rope=False,
+                                     causal=True)
+        pad = t_max - s
+        ck = jnp.pad(kv["k"], ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(kv["v"], ((0, 0), (0, pad), (0, 0), (0, 0)))
+        h = h + out
+        h = _cross_attn(bp, h, cfg, ckv)
+        h = _mlp(bp, h, cfg)
+        return h, {"k": ck, "v": cv}
+
+    x, self_kv = jax.lax.scan(body, x, (params["decoder"], cross_kv))
+    x = cm.apply_norm(x, params["final_norm"], cfg.norm)
+    logits = cm.logits_apply(params["embed"], x[:, -1:], cfg)
+    cache = {"k": self_kv["k"], "v": self_kv["v"],
+             "cross_k": cross_kv[0], "cross_v": cross_kv[1]}
+    return logits, cache
+
+
+def decode_step(params, token, cache, pos, cfg: ModelConfig):
+    """One decoder step with self-cache update + static cross K/V."""
+    pos = jnp.asarray(pos, jnp.int32)
+    x = cm.embed_apply(params["embed"], token)
+    x = x + cm.sinusoidal_at(pos, cfg.d_model).astype(x.dtype)
+
+    def body(h, xs):
+        bp, ck, cv, xk, xv = xs
+        acache = {"k": ck, "v": cv, "pos": pos}
+        h, kv = _self_attn(bp, h, cfg, None, causal=True, cache=acache)
+        h = _cross_attn(bp, h, cfg, (xk, xv))
+        h = _mlp(bp, h, cfg)
+        return h, {"k": kv["k"], "v": kv["v"]}
+
+    x, new_kv = jax.lax.scan(
+        body, x, (params["decoder"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = cm.apply_norm(x, params["final_norm"], cfg.norm)
+    logits = cm.logits_apply(params["embed"], x, cfg)
+    new_cache = dict(cache, k=new_kv["k"], v=new_kv["v"])
+    return logits, new_cache

@@ -1,0 +1,5 @@
+from repro.optim.optimizer import (OptState, init_opt_state, adamw_update,
+                                   lr_schedule, global_norm, clip_by_global_norm)
+
+__all__ = ["OptState", "init_opt_state", "adamw_update", "lr_schedule",
+           "global_norm", "clip_by_global_norm"]

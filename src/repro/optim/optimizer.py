@@ -1,0 +1,94 @@
+"""AdamW with mixed precision, global-norm clipping and LR scheduling.
+
+Built from scratch (no optax in the environment).  The optimizer state holds
+fp32 first/second moments and (optionally) an fp32 master copy of bf16
+params.  Under ZeRO-1 the launch layer shards every state leaf over the data
+axis (each data-parallel rank owns a slice of m/v/master); the update is a
+pure element-wise map so GSPMD keeps it fully local, with the reduce-scatter /
+all-gather pair induced by the gradient and parameter shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OptState:
+    step: jax.Array
+    m: Any
+    v: Any
+    master: Optional[Any]
+
+
+def init_opt_state(params, tcfg: TrainConfig, master: bool = True) -> OptState:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros32, params),
+        v=jax.tree.map(zeros32, params),
+        master=(jax.tree.map(lambda p: p.astype(jnp.float32), params)
+                if master else None),
+    )
+
+
+def lr_schedule(step: jax.Array, tcfg: TrainConfig) -> jax.Array:
+    """Linear warmup → cosine decay to 10% of peak."""
+    step = step.astype(jnp.float32)
+    warm = tcfg.lr * step / max(tcfg.warmup_steps, 1)
+    frac = jnp.clip((step - tcfg.warmup_steps)
+                    / max(tcfg.total_steps - tcfg.warmup_steps, 1), 0.0, 1.0)
+    cos = tcfg.lr * (0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < tcfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_update(grads, state: OptState, params, tcfg: TrainConfig):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    grads32, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(step, tcfg)
+    b1, b2 = tcfg.beta1, tcfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.m, grads32)
+    new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                         state.v, grads32)
+
+    ref = state.master if state.master is not None else params
+
+    def upd(p, m, v):
+        p32 = p.astype(jnp.float32)
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + 1e-8)
+        return p32 - lr * (u + tcfg.weight_decay * p32)
+
+    new_ref = jax.tree.map(upd, ref, new_m, new_v)
+    if state.master is not None:
+        new_master = new_ref
+        new_params = jax.tree.map(lambda r, p: r.astype(p.dtype),
+                                  new_ref, params)
+    else:
+        new_master = None
+        new_params = jax.tree.map(lambda r, p: r.astype(p.dtype),
+                                  new_ref, params)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(step, new_m, new_v, new_master), metrics

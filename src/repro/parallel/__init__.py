@@ -1,0 +1,8 @@
+"""Parallelism substrate: logical sharding rules, mesh helpers, collectives."""
+
+from repro.parallel.sharding import (Sharder, current_sharder, set_sharder,
+                                     no_sharding, LOGICAL_RULES_TP,
+                                     LOGICAL_RULES_SP, rules_for)
+
+__all__ = ["Sharder", "current_sharder", "set_sharder", "no_sharding",
+           "LOGICAL_RULES_TP", "LOGICAL_RULES_SP", "rules_for"]

@@ -1,0 +1,201 @@
+"""Logical-axis sharding: the single place mesh layout decisions live.
+
+Model code annotates activations/params with *logical* axis names
+(``shard(x, "batch", "seq", "d_model")``); a :class:`Sharder` maps logical
+names to mesh axes through a rules table and applies
+``jax.lax.with_sharding_constraint``.  With no sharder installed (CPU smoke
+tests) the calls are no-ops, so the same model code runs everywhere.
+
+Two built-in profiles:
+
+* ``tp_heads`` — classic DP x TP: batch over (pod, data); heads / d_ff /
+  vocab / experts over model.  Default for every arch.
+* ``sp_seq``   — sequence parallelism: batch over (pod, data), sequence over
+  model for activations (used when an arch's head count cannot split the
+  model axis, e.g. gemma3-4b with 8 heads on a 16-way axis, and for
+  long-context cells where the KV cache must shard over chips).
+
+A rule maps a logical name to a mesh axis (or tuple of axes).  Constraints
+silently skip non-divisible dims (XLA would pad; we prefer explicitness: the
+dim stays unsharded and the dry-run memory report shows it).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, tuple]
+
+LOGICAL_RULES_TP = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "d_model": None,
+    "d_ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_cap": None,
+    "inner": "model",            # mamba d_inner / rg-lru width
+    "state": None,
+    "conv": None,
+    "frames": None,
+    "patches": None,
+}
+
+LOGICAL_RULES_SP = dict(LOGICAL_RULES_TP, **{
+    "heads": None,
+    "kv_heads": None,
+    "seq": "model",
+    "kv_seq": "model",
+})
+
+# MoE archs whose expert count cannot split the model axis (granite: 40e on a
+# 16-way axis): shard the capacity dim instead and sequence-parallel attention.
+LOGICAL_RULES_MOE_CAP = dict(LOGICAL_RULES_SP, **{
+    "experts": None,
+    "expert_cap": "model",
+})
+
+# 2-D expert parallelism: experts over model AND token capacity over data —
+# dispatch buffers fully sharded (beyond-paper §Perf iteration).
+LOGICAL_RULES_EP_2D = dict(LOGICAL_RULES_SP, **{
+    "experts": "model",
+    "expert_cap": ("pod", "data"),
+})
+
+def rules_for(profile: str) -> dict:
+    if profile == "tp_heads":
+        return dict(LOGICAL_RULES_TP)
+    if profile == "sp_seq":
+        return dict(LOGICAL_RULES_SP)
+    if profile == "moe_cap":
+        return dict(LOGICAL_RULES_MOE_CAP)
+    if profile == "ep_2d":
+        return dict(LOGICAL_RULES_EP_2D)
+    raise ValueError(f"unknown sharding profile {profile!r}")
+
+
+@dataclasses.dataclass
+class Sharder:
+    mesh: Mesh
+    rules: dict
+
+    def spec(self, *logical: Optional[str]) -> P:
+        used: set = set()
+        axes = []
+        for name in logical:
+            ax = self.rules.get(name) if name else None
+            # an axis may appear at most once in a PartitionSpec
+            if ax is None:
+                axes.append(None)
+                continue
+            flat = (ax,) if isinstance(ax, str) else tuple(ax)
+            flat = tuple(a for a in flat if a not in used and a in self.mesh.axis_names)
+            used.update(flat)
+            axes.append(flat if len(flat) > 1 else (flat[0] if flat else None))
+        while axes and axes[-1] is None:
+            axes.pop()
+        return P(*axes)
+
+    def _divisible(self, shape, spec: P) -> bool:
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+            if ax is None:
+                continue
+            flat = (ax,) if isinstance(ax, str) else ax
+            total = int(np.prod([sizes[a] for a in flat]))
+            if dim % total:
+                return False
+        return True
+
+    def safe_spec(self, shape, logical) -> P:
+        """spec() that silently drops axes a dim cannot divide.
+
+        When a rule maps to an axis tuple (e.g. batch → (pod, data)) and only
+        a prefix divides, the divisible prefix is kept — so batch=256 on a
+        (pod=2, data=16) mesh shards 32-way, while batch=2 still shards over
+        pod alone rather than falling back to replication.
+        """
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        kept = []
+        for dim, name in zip(shape, logical):
+            ax = self.rules.get(name) if name else None
+            if ax is not None:
+                flat = (ax,) if isinstance(ax, str) else tuple(ax)
+                flat = tuple(a for a in flat if a in self.mesh.axis_names)
+                while flat:
+                    total = int(np.prod([sizes[a] for a in flat]))
+                    if dim % total == 0 and total > 1:
+                        break
+                    flat = flat[:-1]
+                ax = flat if flat else None
+            kept.append(ax)
+        return self._spec_from_axes(kept)
+
+    def shard(self, x: jax.Array, *logical: Optional[str]) -> jax.Array:
+        if len(logical) != x.ndim:
+            raise ValueError(f"rank mismatch: {x.shape} vs {logical}")
+        spec = self.safe_spec(x.shape, logical)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def _spec_from_axes(self, axes) -> P:
+        used: set = set()
+        out = []
+        for ax in axes:
+            if ax is None:
+                out.append(None)
+                continue
+            flat = (ax,) if isinstance(ax, str) else tuple(ax)
+            flat = tuple(a for a in flat
+                         if a not in used and a in self.mesh.axis_names)
+            used.update(flat)
+            out.append(flat if len(flat) > 1 else (flat[0] if flat else None))
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def named_sharding(self, *logical: Optional[str]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+
+_STATE = threading.local()
+
+
+def set_sharder(s: Optional[Sharder]) -> None:
+    _STATE.sharder = s
+
+
+def current_sharder() -> Optional[Sharder]:
+    return getattr(_STATE, "sharder", None)
+
+
+@contextlib.contextmanager
+def use_sharder(s: Optional[Sharder]):
+    prev = current_sharder()
+    set_sharder(s)
+    try:
+        yield
+    finally:
+        set_sharder(prev)
+
+
+def no_sharding():
+    return use_sharder(None)
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Annotate ``x`` with logical axes; no-op when no sharder installed."""
+    s = current_sharder()
+    if s is None:
+        return x
+    return s.shard(x, *logical)

@@ -1,0 +1,8 @@
+from repro.runtime.fault_tolerance import (TrainingRunner, StragglerDetector,
+                                           FaultInjector)
+from repro.runtime.compression import (int8_quantize, int8_dequantize,
+                                       ErrorFeedback, compress_grads)
+
+__all__ = ["TrainingRunner", "StragglerDetector", "FaultInjector",
+           "int8_quantize", "int8_dequantize", "ErrorFeedback",
+           "compress_grads"]

@@ -1,0 +1,3 @@
+from repro.serving.engine import ServingEngine, Request
+
+__all__ = ["ServingEngine", "Request"]

@@ -1,0 +1,112 @@
+"""Slot-based continuous-batching serving engine.
+
+A fixed decode batch of ``max_slots`` sequences advances one token per step;
+finished sequences retire and their slots are immediately refilled from the
+queue (prefill splices the new request's KV into the batched cache at the
+slot index).  Per-slot positions are first-class in the decode path
+(``models.common._cache_write`` and friends), so slots at different depths
+coexist in one batched step — the production pattern behind vLLM-style
+serving, on top of the Medusa KV layout engine.
+
+Decoder-only families (dense/moe/ssm/hybrid/vlm); greedy sampling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                     # [prompt_len] int32
+    max_new_tokens: int
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, max_slots: int, t_max: int):
+        assert cfg.family != "audio", "engine covers decoder-only families"
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.t_max = t_max
+        self.caches = api.init_cache(cfg, max_slots, t_max)
+        self.pos = np.zeros((max_slots,), np.int32)      # next write position
+        self.active: List[Optional[Request]] = [None] * max_slots
+        self.tokens = np.zeros((max_slots, 1), np.int32)
+        self.queue: List[Request] = []
+
+        self._decode = jax.jit(
+            lambda p, tok, caches, pos: api.decode_fn(p, tok, caches, pos, cfg))
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.max_slots):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            prompt = jnp.asarray(req.prompt)[None, :]
+            logits, req_cache = api.prefill_fn(
+                self.params, {"tokens": prompt}, self.cfg, self.t_max)
+            self._splice(req_cache, slot)
+            self.active[slot] = req
+            self.pos[slot] = len(req.prompt)
+            first = int(np.argmax(np.asarray(logits[0, -1])))
+            req.generated.append(first)
+            self.tokens[slot, 0] = first
+
+    def _splice(self, req_cache, slot: int) -> None:
+        """Insert a single-request cache into the batch cache at ``slot``."""
+        def one(batch_leaf, req_leaf):
+            # batch dim is axis 1 for stacked 'unit' leaves, axis 0 for tail
+            axis = 1 if batch_leaf.ndim >= 4 and batch_leaf.shape[1] == \
+                self.max_slots else 0
+            idx = [slice(None)] * batch_leaf.ndim
+            idx[axis] = slice(slot, slot + 1)
+            return batch_leaf.at[tuple(idx)].set(req_leaf)
+        self.caches = jax.tree.map(one, self.caches, req_cache)
+
+    # -- one engine step -----------------------------------------------------
+    def step(self) -> int:
+        """Admit + one batched decode step; returns #active sequences."""
+        self._admit()
+        live = [s for s in range(self.max_slots) if self.active[s] is not None]
+        if not live:
+            return 0
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(self.tokens), self.caches,
+            jnp.asarray(self.pos))
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        for s in live:
+            req = self.active[s]
+            self.pos[s] += 1
+            req.generated.append(int(nxt[s]))
+            self.tokens[s, 0] = int(nxt[s])
+            if (len(req.generated) >= req.max_new_tokens
+                    or self.pos[s] + 1 >= self.t_max):
+                req.done = True
+                self.active[s] = None
+        # idle slots keep position 0 and a dummy token; their cache rows are
+        # garbage but masked out by their own (stale) positions — they are
+        # overwritten at admission.
+        return len([s for s in range(self.max_slots)
+                    if self.active[s] is not None])
+
+    def run_to_completion(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.queue:
+                return

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests see the default (1-device) CPU platform; multi-device tests spawn
+# subprocesses with their own XLA_FLAGS (per dry-run instructions, the
+# 512-device flag is never set globally).
+os.environ.setdefault("REPRO_TEST", "1")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

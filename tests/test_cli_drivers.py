@@ -1,0 +1,30 @@
+"""Smoke the production CLI drivers end to end (subprocesses, CPU 1x1 mesh)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+ENV = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+
+
+@pytest.mark.slow
+def test_train_cli_with_failure_injection(tmp_path):
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch",
+         "stablelm-1.6b", "--smoke", "--steps", "12", "--batch", "4",
+         "--seq", "32", "--ckpt-dir", str(tmp_path), "--ckpt-every", "4",
+         "--fail-at", "6", "--log-every", "4"],
+        env=ENV, capture_output=True, text=True, timeout=560, cwd=ROOT)
+    assert "done at step 12" in r.stdout, (r.stdout[-1200:], r.stderr[-800:])
+    assert "restarts=1" in r.stdout
+
+
+@pytest.mark.slow
+def test_serve_cli(tmp_path):
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "gemma3-4b",
+         "--smoke", "--batch", "2", "--prompt-len", "16", "--gen-len", "8"],
+        env=ENV, capture_output=True, text=True, timeout=560, cwd=ROOT)
+    assert "tok/s" in r.stdout, (r.stdout[-1200:], r.stderr[-800:])

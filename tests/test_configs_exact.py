@@ -1,0 +1,79 @@
+"""Guard the assigned architecture numbers against drift — exact values."""
+import pytest
+
+from repro.configs import get_config, ARCHS, SHAPES
+
+
+EXACT = {
+    "starcoder2-15b": dict(n_layers=40, d_model=6144, n_heads=48,
+                           n_kv_heads=4, d_ff=24576, vocab_size=49152),
+    "stablelm-1.6b": dict(n_layers=24, d_model=2048, n_heads=32,
+                          n_kv_heads=32, d_ff=5632, vocab_size=100352),
+    "gemma3-12b": dict(n_layers=48, d_model=3840, n_heads=16, n_kv_heads=8,
+                       d_ff=15360, vocab_size=262144),
+    "gemma3-4b": dict(n_layers=34, d_model=2560, n_heads=8, n_kv_heads=4,
+                      d_ff=10240, vocab_size=262144),
+    "internvl2-1b": dict(n_layers=24, d_model=896, n_heads=14, n_kv_heads=2,
+                         d_ff=4864, vocab_size=151655),
+    "mamba2-780m": dict(n_layers=48, d_model=1536, d_ff=0,
+                        vocab_size=50280),
+    "recurrentgemma-2b": dict(n_layers=26, d_model=2560, n_heads=10,
+                              n_kv_heads=1, d_ff=7680, vocab_size=256000),
+    "granite-moe-3b-a800m": dict(n_layers=32, d_model=1536, n_heads=24,
+                                 n_kv_heads=8, vocab_size=49155),
+    "kimi-k2-1t-a32b": dict(n_layers=61, d_model=7168, n_heads=64,
+                            n_kv_heads=8, vocab_size=163840),
+    "whisper-medium": dict(n_layers=24, d_model=1024, n_heads=16,
+                           n_kv_heads=16, d_ff=4096, vocab_size=51865,
+                           encoder_layers=24, encoder_seq=1500),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(EXACT))
+def test_exact_assigned_numbers(arch):
+    cfg = get_config(arch)
+    for field, want in EXACT[arch].items():
+        assert getattr(cfg, field) == want, (arch, field)
+
+
+def test_moe_configs():
+    g = get_config("granite-moe-3b-a800m").moe
+    assert (g.n_experts, g.top_k, g.expert_d_ff) == (40, 8, 512)
+    k = get_config("kimi-k2-1t-a32b").moe
+    assert (k.n_experts, k.top_k, k.expert_d_ff) == (384, 8, 2048)
+
+
+def test_ssm_config():
+    m = get_config("mamba2-780m").ssm
+    assert m.d_state == 128
+    assert get_config("mamba2-780m").block_pattern == "M"
+
+
+def test_shapes_exact():
+    assert (SHAPES["train_4k"].seq_len, SHAPES["train_4k"].global_batch) == (4096, 256)
+    assert (SHAPES["prefill_32k"].seq_len, SHAPES["prefill_32k"].global_batch) == (32768, 32)
+    assert (SHAPES["decode_32k"].seq_len, SHAPES["decode_32k"].global_batch) == (32768, 128)
+    assert (SHAPES["long_500k"].seq_len, SHAPES["long_500k"].global_batch) == (524288, 1)
+
+
+def test_param_counts_near_nameplate():
+    # name-plate sanity: within tolerance of the advertised sizes
+    targets = {"starcoder2-15b": (15e9, 16.5e9), "gemma3-12b": (11e9, 13e9),
+               "gemma3-4b": (3.5e9, 4.5e9), "mamba2-780m": (0.7e9, 0.85e9),
+               "kimi-k2-1t-a32b": (0.95e12, 1.1e12),
+               "whisper-medium": (0.7e9, 0.8e9)}
+    for arch, (lo, hi) in targets.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+    k = get_config("kimi-k2-1t-a32b")
+    assert 28e9 <= k.active_param_count() <= 34e9       # "A32B"
+    g = get_config("granite-moe-3b-a800m")
+    assert 0.7e9 <= g.active_param_count() <= 1.0e9     # "A800M"
+
+
+def test_pattern_tiling():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        types = cfg.layer_types()
+        assert len(types) == cfg.n_layers
+        assert set(types) <= {"A", "L", "R", "M"}

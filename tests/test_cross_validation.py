@@ -1,0 +1,36 @@
+"""Cross-validation: the two independent implementations of the paper's
+algorithm — the cycle-accurate pipeline and the log-stage exchange network —
+agree with each other (and the oracle) over the whole small design space."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import medusa_transpose, medusa_transpose_cycle_accurate
+from repro.core.burst import MedusaReadSim
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([2, 4, 8, 16]), st.integers(1, 4))
+def test_cycle_accurate_equals_exchange_network(n, w):
+    x = jax.random.normal(jax.random.PRNGKey(n * 7 + w), (n, n, w))
+    a = medusa_transpose_cycle_accurate(x)
+    b = medusa_transpose(x, 0, 1)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("n", [2, 4, 8])
+def test_burst_sim_agrees_with_unit(n):
+    """Feeding the burst simulator one full group reproduces the one-shot
+    transposition unit's output on every port."""
+    rng = np.random.RandomState(n)
+    lines = rng.randn(n, n)
+    sim = MedusaReadSim(n, depth=4)
+    for p in range(n):
+        sim.push_line(p, lines[p])
+    sim.run(2 * n)
+    # unit view: input banks I[bank=y, addr=p] = word (p, y) → out[p] = line p
+    for p in range(n):
+        np.testing.assert_allclose(np.asarray(sim.pop_line(p, 0)).ravel(),
+                                   lines[p])

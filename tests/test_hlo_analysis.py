@@ -1,0 +1,60 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import (analyze_hlo, model_flops,
+                                       roofline_terms, HloCosts)
+from repro.configs import get_config, SHAPES
+
+
+def test_scan_trip_count_correction():
+    w = jnp.ones((128, 128))
+
+    def f(x):
+        y, _ = jax.lax.scan(lambda c, _: (c @ w, None), x, None, length=8)
+        return y
+
+    txt = jax.jit(f).lower(jnp.ones((128, 128))).compile().as_text()
+    costs = analyze_hlo(txt)
+    assert costs.flops == 8 * 2 * 128 ** 3          # exact, trip-corrected
+    assert 8 in costs.while_trip_counts.values()
+
+
+def test_nested_scan_multiplies():
+    w = jnp.ones((64, 64))
+
+    def inner(x):
+        y, _ = jax.lax.scan(lambda c, _: (c @ w, None), x, None, length=3)
+        return y
+
+    def outer(x):
+        y, _ = jax.lax.scan(lambda c, _: (inner(c), None), x, None, length=5)
+        return y
+
+    txt = jax.jit(outer).lower(jnp.ones((64, 64))).compile().as_text()
+    costs = analyze_hlo(txt)
+    assert costs.flops == 15 * 2 * 64 ** 3
+
+
+def test_roofline_terms_dominance():
+    c = HloCosts(flops=197e12, bytes=819e9 * 2, collective_bytes=50e9 / 2)
+    r = roofline_terms(c, chips=1)
+    assert abs(r["compute_s"] - 1.0) < 1e-9
+    assert abs(r["memory_s"] - 2.0) < 1e-9
+    assert abs(r["collective_s"] - 0.5) < 1e-9
+    assert r["dominant"] == "memory"
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("stablelm-1.6b")
+    train = model_flops(cfg, SHAPES["train_4k"])
+    dec = model_flops(cfg, SHAPES["decode_32k"])
+    assert train == 6.0 * cfg.active_param_count() * 4096 * 256
+    assert dec == 2.0 * cfg.active_param_count() * 128
+
+
+def test_moe_uses_active_params():
+    cfg = get_config("kimi-k2-1t-a32b")
+    assert cfg.active_param_count() < 0.05 * cfg.param_count()
+    f = model_flops(cfg, SHAPES["train_4k"])
+    assert f == 6.0 * cfg.active_param_count() * 4096 * 256

@@ -1,0 +1,48 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_smoke
+from repro.data import SyntheticLM
+from repro.models import api
+from repro.kernels import ops
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _no_kernels():
+    """Model tests use XLA-native ops (kernels have their own suite)."""
+    was = ops.kernels_enabled()
+    ops.use_kernels(False)
+    yield
+    ops.use_kernels(was)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_train_step(arch):
+    """Reduced same-family config: one forward/loss on CPU, shapes + no NaN."""
+    cfg = get_smoke(arch)
+    data = SyntheticLM(cfg, batch=2, seq=16)
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+    params = api.init_params(cfg, KEY)
+    loss = api.loss_fn(params, batch, cfg)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_serve(arch):
+    cfg = get_smoke(arch)
+    data = SyntheticLM(cfg, batch=2, seq=12)
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+    batch.pop("targets")
+    t_max = 16 + (cfg.n_patches or 0)
+    logits, caches = api.prefill_fn(params := api.init_params(cfg, KEY),
+                                    batch, cfg, t_max)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    pos = batch["tokens"].shape[1] + (cfg.n_patches or 0)
+    l2, caches = api.decode_fn(params, batch["tokens"][:, :1], caches, pos, cfg)
+    assert l2.shape[0] == 2 and l2.shape[1] == 1
+    assert np.all(np.isfinite(np.asarray(l2, np.float32)))

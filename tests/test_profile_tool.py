@@ -1,0 +1,23 @@
+"""The profiling instrument: per-op breakdown sums match analyze_hlo."""
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.profile import breakdown
+
+
+def test_breakdown_totals_match_analyzer():
+    w = jnp.ones((64, 64))
+
+    def f(x):
+        y, _ = jax.lax.scan(lambda c, _: (jnp.tanh(c @ w), None), x, None,
+                            length=6)
+        return y.sum()
+
+    txt = jax.jit(f).lower(jnp.ones((64, 64))).compile().as_text()
+    costs, totals = breakdown(txt)
+    ref = analyze_hlo(txt)
+    assert abs(totals["flops"] - ref.flops) < 1e-6
+    assert abs(totals["bytes"] - ref.bytes) / max(ref.bytes, 1) < 1e-6
+    assert abs(totals["collective_bytes"] - ref.collective_bytes) < 1e-6
+    assert costs[0].bytes >= costs[-1].bytes        # sorted

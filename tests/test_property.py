@@ -1,0 +1,79 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (medusa_transpose, read_network_medusa,
+                        write_network_medusa, read_network_oracle,
+                        barrel_rotate)
+from repro.core.analysis import InterconnectConfig, complexity_summary
+from repro.models.common import softmax_xent, rope, pad_vocab
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from([2, 4, 8, 16, 32]))
+def test_transpose_involution(n):
+    x = jax.random.normal(jax.random.PRNGKey(n), (n, n, 3))
+    np.testing.assert_array_equal(
+        np.asarray(medusa_transpose(medusa_transpose(x, 0, 1), 0, 1)),
+        np.asarray(x))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from([2, 4, 8]), st.integers(1, 5), st.integers(1, 4))
+def test_even_bandwidth_partition(n, g, w):
+    """Every port receives exactly G lines of its own round-robin stream —
+    the even static partition of paper obs. 1."""
+    lines = jnp.arange(g * n * n * w, dtype=jnp.float32).reshape(g * n, n, w)
+    banked = read_network_medusa(lines, n)
+    for p in range(n):
+        got = np.asarray(banked[:, :, p])           # port p's bank
+        want = np.asarray(lines[p::n])
+        np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from([4, 8, 16]), st.integers(-40, 40))
+def test_rotation_inverse(n, amt):
+    x = jax.random.normal(jax.random.PRNGKey(abs(amt) + n), (n, 2))
+    rot = barrel_rotate(x, amt % n)
+    back = barrel_rotate(rot, (n - amt) % n)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([64, 128, 512]), st.sampled_from([4, 8, 16, 32]))
+def test_mux_model_monotone(w_line, n):
+    """Medusa never costs more muxes than baseline for N >= 2 (strictly less
+    for N > 2) — the paper's complexity claim over the whole design space."""
+    s = complexity_summary(InterconnectConfig(
+        w_line=w_line, w_acc=w_line // n, n_read_ports=n, n_write_ports=n))
+    if n > 2:
+        assert s["medusa_mux_bits"] < s["baseline_mux_bits"]
+    else:
+        assert s["medusa_mux_bits"] <= s["baseline_mux_bits"]
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 200))
+def test_pad_vocab_multiple(v):
+    p = pad_vocab(v)
+    assert p % 128 == 0 and p >= v and p - v < 128
+
+
+def test_xent_never_predicts_padding():
+    logits = jnp.zeros((2, 3, 128))
+    logits = logits.at[..., 100:].set(1e9)       # huge mass on padded slots
+    targets = jnp.zeros((2, 3), jnp.int32)
+    loss = softmax_xent(logits, targets, vocab_size=100)
+    assert float(loss) < 10.0                    # padded entries masked out
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 1000))
+def test_rope_preserves_norm(pos):
+    x = jax.random.normal(jax.random.PRNGKey(pos), (1, 1, 2, 64))
+    y = rope(x, jnp.array([pos]), 10_000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y)),
+                               np.linalg.norm(np.asarray(x)), rtol=1e-5)

@@ -1,0 +1,56 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (barrel_rotate, index_twist, baseline_mux_count,
+                        medusa_mux_count, mux_reduction, rotation_depth)
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 32, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+def test_barrel_rotate_equals_roll(n, dtype):
+    x = jnp.arange(n * 3, dtype=dtype).reshape(n, 3)
+    for c in (0, 1, n - 1, n, 2 * n + 3):
+        np.testing.assert_array_equal(
+            np.asarray(barrel_rotate(x, c)), np.asarray(jnp.roll(x, -c, 0)))
+
+
+def test_barrel_rotate_other_axis():
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 8, 2))
+    np.testing.assert_allclose(np.asarray(barrel_rotate(x, 5, axis=1)),
+                               np.asarray(jnp.roll(x, -5, 1)))
+
+
+def test_barrel_rotate_rejects_non_pow2():
+    with pytest.raises(ValueError):
+        barrel_rotate(jnp.zeros((6, 2)), 1)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 63), st.integers(0, 63))
+def test_rotation_composes(a, b):
+    x = jnp.arange(16.0).reshape(16, 1)
+    once = barrel_rotate(barrel_rotate(x, a), b)
+    combined = barrel_rotate(x, a + b)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(combined))
+
+
+def test_index_twist():
+    n = 8
+    x = jnp.arange(n * n).reshape(n, n)
+    t = index_twist(x, 0, 1, -1)
+    ref = jnp.stack([jnp.roll(x[b], -b) for b in range(n)])
+    np.testing.assert_array_equal(np.asarray(t), np.asarray(ref))
+    # inverse twist restores
+    back = index_twist(t, 0, 1, +1)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def test_mux_counts_match_paper():
+    # §II-B / §III-D at the paper design point: 512-bit line, 32 ports
+    assert baseline_mux_count(512, 32) == 512 * 31
+    assert medusa_mux_count(512, 32) == 512 * 5
+    assert abs(mux_reduction(512, 32) - 6.2) < 0.01
+    assert rotation_depth(32) == 5

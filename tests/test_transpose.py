@@ -1,0 +1,89 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (medusa_transpose, medusa_transpose_cycle_accurate,
+                        medusa_swap_minor, read_network_medusa,
+                        write_network_medusa, read_network_oracle,
+                        write_network_oracle, read_network_crossbar,
+                        write_network_crossbar, transposition_latency_cycles,
+                        port_stream, port_major_view, Interconnect)
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16])
+def test_cycle_accurate_is_transpose(n):
+    i = jnp.arange(n * n * 2.0).reshape(n, n, 2)
+    o = medusa_transpose_cycle_accurate(i)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(jnp.swapaxes(i, 0, 1)))
+
+
+def test_cycle_accurate_completes_in_n_cycles():
+    n = 8
+    i = jnp.arange(n * n * 1.0).reshape(n, n, 1)
+    _, trace = medusa_transpose_cycle_accurate(i, return_trace=True)
+    assert len(trace) == n == transposition_latency_cycles(n)
+    # after cycle c < n the transpose is NOT yet complete (pipeline fills)
+    partial = trace[n // 2][2]
+    assert not np.allclose(np.asarray(partial),
+                           np.asarray(jnp.swapaxes(i, 0, 1)))
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 32, 64, 128])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_exchange_network_transpose(n, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(n), (n, n, 2)).astype(dtype)
+    np.testing.assert_array_equal(
+        np.asarray(medusa_transpose(x, 0, 1)), np.asarray(jnp.swapaxes(x, 0, 1)))
+
+
+@pytest.mark.parametrize("impl", ["medusa", "crossbar", "oracle"])
+@pytest.mark.parametrize("n,g,w", [(4, 2, 3), (8, 4, 16), (16, 1, 1)])
+def test_interconnect_read_write_roundtrip(impl, n, g, w):
+    lines = jax.random.normal(jax.random.PRNGKey(0), (g * n, n, w))
+    ic = Interconnect(n_ports=n, impl=impl)
+    banked = ic.read(lines)
+    np.testing.assert_allclose(np.asarray(banked),
+                               np.asarray(read_network_oracle(lines, n)))
+    back = ic.write(banked)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(lines))
+
+
+def test_banked_semantics_deep_narrow():
+    # banked[g, y, p] = lines[g*N + p, y]: port p owns lane column p
+    n, g, w = 4, 3, 2
+    lines = jnp.arange(g * n * n * w, dtype=jnp.float32).reshape(g * n, n, w)
+    banked = read_network_medusa(lines, n)
+    for p in range(n):
+        np.testing.assert_allclose(np.asarray(port_stream(banked, p)),
+                                   np.asarray(lines[p::n]))
+    pm = port_major_view(banked)
+    assert pm.shape == (n, g, n, w)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([2, 4, 8, 16]), st.integers(1, 4), st.integers(1, 5))
+def test_read_write_identity_property(n, g, w):
+    lines = jnp.arange(g * n * n * w, dtype=jnp.float32).reshape(g * n, n, w)
+    np.testing.assert_allclose(
+        np.asarray(write_network_medusa(read_network_medusa(lines, n), n)),
+        np.asarray(lines))
+    np.testing.assert_allclose(
+        np.asarray(write_network_crossbar(read_network_crossbar(lines, n), n)),
+        np.asarray(lines))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 130), st.integers(1, 130))
+def test_swap_minor_rectangular(r, c):
+    x = jax.random.normal(jax.random.PRNGKey(r * 131 + c), (2, r, c))
+    np.testing.assert_allclose(np.asarray(medusa_swap_minor(x)),
+                               np.asarray(jnp.swapaxes(x, -1, -2)))
+
+
+def test_transpose_involution():
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 16, 4))
+    np.testing.assert_array_equal(
+        np.asarray(medusa_transpose(medusa_transpose(x, 0, 1), 0, 1)),
+        np.asarray(x))
