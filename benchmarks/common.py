@@ -39,13 +39,20 @@ def hlo_op_census(fn, *args) -> Counter:
     return census
 
 
+def _cost_dict(compiled) -> dict:
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):      # older jax: one dict per device
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def bytes_accessed(fn, *args) -> float:
-    cost = jax.jit(fn).lower(*args).compile().cost_analysis() or {}
+    cost = _cost_dict(jax.jit(fn).lower(*args).compile())
     return float(cost.get("bytes accessed", 0.0))
 
 
 def flops_of(fn, *args) -> float:
-    cost = jax.jit(fn).lower(*args).compile().cost_analysis() or {}
+    cost = _cost_dict(jax.jit(fn).lower(*args).compile())
     return float(cost.get("flops", 0.0))
 
 

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke
+from repro.fabric import Fabric
 from repro.models import common as cm
 from benchmarks.common import emit, time_us, hlo_op_census
 
@@ -26,10 +27,11 @@ def _attn(kv_layout: str):
     cfg = dataclasses.replace(get_smoke("starcoder2-15b"),
                               kv_layout=kv_layout, n_kv_heads=HKV,
                               n_heads=HKV * 2, head_dim=D)
+    fabric = Fabric.for_model(cfg)
 
     def f(q, ck, cv, pos):
-        ck_p = cm._kv_port_major(ck, cfg)
-        cv_p = cm._kv_port_major(cv, cfg)
+        ck_p = fabric.kv_port_major(ck)
+        cv_p = fabric.kv_port_major(cv)
         kv_pos = jnp.arange(T)
         return cm._decode_attention(q, ck_p, cv_p, pos, kv_pos,
                                     kv_pos <= pos, 0)

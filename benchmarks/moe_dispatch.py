@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.launch.mesh import compat_shard_map, make_mesh
 from repro.parallel.collectives import ring_all_to_all, xla_all_to_all
 from benchmarks.common import emit, time_us, hlo_op_census
 
@@ -37,16 +38,15 @@ def run() -> list:
                              float(parts[1]) if parts[1] else None, parts[2]))
         return rows or [("moe_dispatch/subprocess_failed", None,
                          r.stderr[-120:].replace(",", ";"))]
-    mesh = jax.make_mesh((n,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((n,), ("x",))
     cap, d = 64, 256
     # each rank holds one [cap, d] block per destination expert
     x = jax.random.normal(jax.random.PRNGKey(0), (n * n, cap, d),
                           dtype=jnp.bfloat16)
 
-    ring = jax.jit(jax.shard_map(lambda a: ring_all_to_all(a, "x"),
+    ring = jax.jit(compat_shard_map(lambda a: ring_all_to_all(a, "x"),
                                  mesh=mesh, in_specs=P("x"), out_specs=P("x")))
-    xla = jax.jit(jax.shard_map(lambda a: xla_all_to_all(a, "x"),
+    xla = jax.jit(compat_shard_map(lambda a: xla_all_to_all(a, "x"),
                                 mesh=mesh, in_specs=P("x"), out_specs=P("x")))
     r1, r2 = np.asarray(ring(x), np.float32), np.asarray(xla(x), np.float32)
     assert np.allclose(r1, r2)

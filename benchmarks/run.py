@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV.  Sub-benchmarks:
   table2_resource        — Table II analogue (medusa vs crossbar networks)
   fig6_scalability       — Fig. 6 analogue (scaling sweep N=8..64)
   kv_layout              — production KV-cache path, per-fabric
+  fabric_unified         — burst-scheduled fabric vs per-consumer calls
   moe_dispatch           — medusa ring vs XLA all-to-all (multi-device)
   roofline               — dry-run roofline table (if results exist)
 """
@@ -20,7 +21,8 @@ from benchmarks.common import emit
 
 def main() -> None:
     mods = ["table_complexity", "table1_baseline_vs_axis", "table2_resource",
-            "fig6_scalability", "kv_layout", "moe_dispatch", "roofline"]
+            "fig6_scalability", "kv_layout", "fabric_unified", "moe_dispatch",
+            "roofline"]
     only = [a for a in sys.argv[1:] if not a.startswith("-")]
     failures = 0
     print("name,us_per_call,derived")

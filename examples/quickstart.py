@@ -11,9 +11,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Interconnect, medusa_transpose_cycle_accurate,
-                        complexity_summary, paper_design_point,
-                        read_network_medusa)
+from repro.core import (medusa_transpose_cycle_accurate, complexity_summary,
+                        paper_design_point)
+from repro.fabric import BurstScheduler, Fabric
 
 # 1. The transposition unit, cycle by cycle (paper Fig. 4): N=4 ports.
 n = 4
@@ -33,13 +33,23 @@ print(f"BRAM: baseline-if-mapped={s['baseline_bram_if_mapped']} "
       f"medusa={s['medusa_bram']} (paper: 960 vs 64)")
 
 # 3. The production data path: line stream → banked port buffers → back.
-ic = Interconnect(n_ports=8, impl="medusa")
+fabric = Fabric.make(n_ports=8, impl="medusa")
 lines = jax.random.normal(jax.random.PRNGKey(0), (32, 8, 16))
-banked = ic.read(lines)                       # [G, word-addr, port-lane, W]
-assert np.allclose(ic.write(banked), lines)   # write network inverts
+banked = fabric.read(lines)                   # [G, word-addr, port-lane, W]
+assert np.allclose(fabric.write(banked), lines)   # write network inverts
 print(f"read/write networks round-trip OK: {lines.shape} -> {banked.shape}")
 
 # 4. Drop-in equivalence across fabrics (paper §III-F).
 for impl in ("crossbar", "oracle"):
-    assert np.allclose(Interconnect(8, impl).read(lines), banked)
+    assert np.allclose(Fabric.make(8, impl).read(lines), banked)
 print("medusa == crossbar == oracle (identical transfer semantics)")
+
+# 5. Many logical streams, one network invocation: the burst scheduler.
+sched = BurstScheduler(fabric)
+sched.enqueue_read("kv_read", lines)
+sched.enqueue_read("weight_stream",
+                   jax.random.normal(jax.random.PRNGKey(1), (16, 8, 4)))
+moved = sched.flush()
+assert np.allclose(moved["kv_read"], banked)
+print(f"burst scheduler: {sched.stats.streams_served} streams in "
+      f"{sched.stats.network_calls} network call(s)")

@@ -1,7 +1,10 @@
-from repro.configs.base import (ModelConfig, MoEConfig, SSMConfig, RGLRUConfig,
+from repro.configs.base import (FabricConfig, ModelConfig, MoEConfig,
+                                PortSpec, SSMConfig, RGLRUConfig,
                                 ShapeConfig, TrainConfig, SHAPES)
-from repro.configs.registry import ARCHS, get_config, get_smoke, get_shape, cells
+from repro.configs.registry import (ARCHS, get_config, get_fabric, get_smoke,
+                                    get_shape, cells)
 
-__all__ = ["ModelConfig", "MoEConfig", "SSMConfig", "RGLRUConfig",
-           "ShapeConfig", "TrainConfig", "SHAPES", "ARCHS", "get_config",
-           "get_smoke", "get_shape", "cells"]
+__all__ = ["FabricConfig", "ModelConfig", "MoEConfig", "PortSpec",
+           "SSMConfig", "RGLRUConfig", "ShapeConfig", "TrainConfig", "SHAPES",
+           "ARCHS", "get_config", "get_fabric", "get_smoke", "get_shape",
+           "cells"]

@@ -16,6 +16,59 @@ import jax.numpy as jnp
 
 
 @dataclasses.dataclass(frozen=True)
+class PortSpec:
+    """One logical stream attached to the fabric (an accelerator-side port).
+
+    The paper's port is a W_acc-wide read or write channel into the
+    transposition network; in the framework a port is a named consumer stream
+    (KV read, KV write, weight stream, MoE dispatch) that the burst scheduler
+    multiplexes through the shared read/write networks.
+    """
+    name: str
+    direction: str = "read"       # read | write
+    lanes: int = 1                # W_acc multiplier for this stream
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricConfig:
+    """Parameters of the memory-movement fabric (paper §III design point).
+
+    ``n_ports`` is N = W_line / W_acc (ports per direction), ``lane_width``
+    the per-port word width W_acc in elements, so one DRAM line carries
+    ``line_width = n_ports * lane_width`` elements.  ``impl`` selects the
+    data-transfer network: the paper's transposition network ("medusa"), the
+    gather-based baseline ("crossbar"), plain reshape/swapaxes semantics
+    ("oracle"), or "fused" (beyond-paper: the layout conversion is elided
+    into the consumer's contraction).  ``burst_len`` is MaxBurstLen (lines
+    buffered per port, §III-C); ``page_size`` the KV-cache page granularity
+    in timesteps (one page = a burst of ``page_size`` lines); ``tile`` the
+    exchange-network tile edge (0 = largest power-of-two that fits).
+    """
+    n_ports: int = 8
+    lane_width: int = 64
+    impl: str = "medusa"          # medusa | crossbar | oracle | fused
+    tile: int = 0
+    burst_len: int = 32
+    page_size: int = 64
+
+    @property
+    def line_width(self) -> int:
+        """W_line: elements per DRAM line."""
+        return self.n_ports * self.lane_width
+
+    def validate(self) -> "FabricConfig":
+        if self.impl not in ("medusa", "crossbar", "oracle", "fused"):
+            raise ValueError(f"unknown fabric impl {self.impl!r}")
+        if self.n_ports < 1 or self.lane_width < 1:
+            raise ValueError(f"bad fabric geometry N={self.n_ports} "
+                             f"W_acc={self.lane_width}")
+        if self.page_size < 1 or self.burst_len < 1:
+            raise ValueError(f"bad fabric buffering page_size={self.page_size} "
+                             f"burst_len={self.burst_len}")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
 class MoEConfig:
     n_experts: int
     top_k: int
@@ -84,6 +137,10 @@ class ModelConfig:
     scan_layers: bool = True
     # --- interconnect (the paper's feature) -------------------------------------
     kv_layout: str = "medusa"     # medusa | crossbar | oracle | fused
+    # Explicit fabric geometry; None derives one from the model's KV shape
+    # (ports = KV heads, lane = head_dim) and ``kv_layout``.  Consumers go
+    # through ``resolved_fabric`` / ``repro.fabric.Fabric.for_model``.
+    fabric: Optional[FabricConfig] = None
     # --- serving ------------------------------------------------------------------
     serve_fsdp: bool = False      # shard weights over data axis at inference
     # --- parallelism ---------------------------------------------------------------
@@ -94,6 +151,19 @@ class ModelConfig:
     @property
     def resolved_head_dim(self) -> int:
         return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def resolved_fabric(self) -> FabricConfig:
+        """The fabric this model moves memory through.  An explicit ``fabric``
+        wins; otherwise the KV-cache geometry names one: each KV head is a
+        port (N = n_kv_heads) and a port word is one head vector
+        (W_acc = head_dim), so a line is one timestep across heads."""
+        if self.fabric is not None:
+            return self.fabric.validate()
+        return FabricConfig(
+            n_ports=max(self.n_kv_heads, 1),
+            lane_width=self.resolved_head_dim or 1,
+            impl=self.kv_layout).validate()
 
     @property
     def param_dtype(self):

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import importlib
 
-from repro.configs.base import ModelConfig, SHAPES, ShapeConfig
+from repro.configs.base import FabricConfig, ModelConfig, SHAPES, ShapeConfig
 
 ARCHS = {
     "starcoder2-15b": "repro.configs.starcoder2_15b",
@@ -32,6 +32,12 @@ def get_smoke(arch: str) -> ModelConfig:
 
 def get_shape(name: str) -> ShapeConfig:
     return SHAPES[name]
+
+
+def get_fabric(arch: str) -> FabricConfig:
+    """The memory-movement fabric an architecture names (explicit
+    ``ModelConfig.fabric`` or the one derived from its KV geometry)."""
+    return get_config(arch).resolved_fabric
 
 
 def cells():

@@ -1,72 +1,53 @@
-"""High-level interconnect API — the framework-facing entry point.
+"""DEPRECATED: use :mod:`repro.fabric` instead.
 
-``Interconnect`` bundles the read/write data-transfer networks behind an
-implementation switch so every consumer in the framework (KV-cache layout
-engine, MoE dispatch, weight streaming) can select:
-
-* ``"medusa"``   — the paper's transposition network (log-stage rolls+selects;
-  Pallas kernel on TPU via :mod:`repro.kernels.ops` when tile shapes allow),
-* ``"crossbar"`` — the traditional gather-based baseline (paper §II),
-* ``"oracle"``   — plain reshape/swapaxes (semantics reference).
-
-All three are value-identical; they differ only in the HLO they emit, which is
-exactly what the paper's resource/frequency comparison becomes on TPU.
+``Interconnect`` was the original framework-facing entry point to the
+read/write data-transfer networks.  The fabric subsystem
+(:class:`repro.fabric.Fabric`) absorbed it — plus the burst scheduler and the
+paged KV layout — so every consumer shares one memory-movement API.  This
+shim keeps the old constructor working; each method delegates to a
+:class:`~repro.fabric.Fabric` built from the same (n_ports, impl) pair.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Literal
 
 import jax
 
-from repro.core import transpose as _t
-from repro.core import baseline as _b
-
 Impl = Literal["medusa", "crossbar", "oracle"]
+
+
+def _fabric(n_ports: int, impl: str):
+    # local import: repro.fabric imports repro.core submodules, so importing
+    # it at module scope would cycle through this package's __init__.
+    from repro.fabric import Fabric
+    return Fabric.make(n_ports=n_ports, impl=impl)
 
 
 @dataclasses.dataclass(frozen=True)
 class Interconnect:
-    """A W_line ↔ N x W_acc data-transfer network with selectable fabric."""
+    """Deprecated alias for :class:`repro.fabric.Fabric` (same semantics)."""
 
     n_ports: int
     impl: Impl = "medusa"
 
+    def __post_init__(self):
+        warnings.warn(
+            "repro.core.interconnect.Interconnect is deprecated; use "
+            "repro.fabric.Fabric (Fabric.make(n_ports, impl) or "
+            "Fabric.for_model(cfg))", DeprecationWarning, stacklevel=2)
+
     def read(self, lines: jax.Array) -> jax.Array:
-        """Read network: DRAM line stream ``[L, N, W]`` → banked port buffer
-        ``[G, N(word-addr), N(port-lane), W]``."""
-        if self.impl == "medusa":
-            return _t.read_network_medusa(lines, self.n_ports)
-        if self.impl == "crossbar":
-            return _b.read_network_crossbar(lines, self.n_ports)
-        return _t.read_network_oracle(lines, self.n_ports)
+        return _fabric(self.n_ports, self.impl).read(lines)
 
     def write(self, banked: jax.Array) -> jax.Array:
-        """Write network: banked port buffer → DRAM line stream."""
-        if self.impl == "medusa":
-            return _t.write_network_medusa(banked, self.n_ports)
-        if self.impl == "crossbar":
-            return _b.write_network_crossbar(banked, self.n_ports)
-        return _t.write_network_oracle(banked, self.n_ports)
+        return _fabric(self.n_ports, self.impl).write(banked)
 
     def swap_minor(self, x: jax.Array) -> jax.Array:
-        """Layout engine: transpose the two minor axes of ``x`` (rectangular
-        OK) — e.g. KV cache [T, H*D-line] ↔ [H, T-stream].  Uses the fabric
-        selected by ``impl``."""
-        if self.impl == "medusa":
-            return _t.medusa_swap_minor(x)
-        if self.impl == "crossbar":
-            # gather-based transpose: explicit index routing (over-provisioned)
-            import jax.numpy as jnp
-            r, c = x.shape[-2], x.shape[-1]
-            i = jax.lax.broadcasted_iota(jnp.int32, x.shape[:-2] + (c, r), x.ndim - 2)
-            j = jax.lax.broadcasted_iota(jnp.int32, x.shape[:-2] + (c, r), x.ndim - 1)
-            flat = x.reshape(x.shape[:-2] + (r * c,))
-            return jnp.take_along_axis(flat, (j * c + i).reshape(x.shape[:-2] + (c * r,)),
-                                       axis=-1).reshape(x.shape[:-2] + (c, r))
-        return _t.transpose_oracle(x, x.ndim - 2, x.ndim - 1)
+        return _fabric(self.n_ports, self.impl).swap_minor(x)
 
     @property
     def latency_cycles(self) -> int:
-        return _t.transposition_latency_cycles(self.n_ports)
+        return _fabric(self.n_ports, self.impl).latency_cycles

@@ -1,3 +1,3 @@
-from repro.data.pipeline import SyntheticLM, make_batch_specs
+from repro.data.pipeline import SyntheticLM, batch_lines, make_batch_specs
 
-__all__ = ["SyntheticLM", "make_batch_specs"]
+__all__ = ["SyntheticLM", "batch_lines", "make_batch_specs"]

@@ -73,6 +73,23 @@ class SyntheticLM:
             step += 1
 
 
+def batch_lines(tokens: np.ndarray, n_ports: int) -> np.ndarray:
+    """Pack a ``[B, S]`` token batch into fabric DRAM lines ``[L, N]``.
+
+    Host→HBM staging expressed in the fabric's units: the flattened batch is
+    padded to whole N-line groups (L a multiple of N, one N-word line per
+    row) so it can ride the shared read network as one more logical stream
+    of the burst scheduler (``benchmarks/fabric_unified.py``).  Padding is
+    zeros; the consumer slices ``B*S`` tokens back off the port streams.
+    """
+    flat = np.asarray(tokens).reshape(-1)
+    group = n_ports * n_ports
+    pad = (-flat.size) % group
+    if pad:
+        flat = np.concatenate([flat, np.zeros((pad,), flat.dtype)])
+    return flat.reshape(-1, n_ports)
+
+
 def make_batch_specs(cfg: ModelConfig, batch: int, seq: int,
                      kind: str = "train"):
     """ShapeDtypeStruct stand-ins for every model input of a step (the

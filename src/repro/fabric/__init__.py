@@ -1,0 +1,53 @@
+"""``repro.fabric`` — the unified memory-movement subsystem.
+
+Every byte that changes layout in this framework moves through one of three
+objects defined here, so the paper's interconnect is a *subsystem* rather
+than per-consumer plumbing:
+
+* :class:`Fabric` — the read/write data-transfer networks, the rectangular
+  layout engine, the KV port-major application, and the explicit routing
+  primitive, all behind one implementation switch;
+* :class:`BurstScheduler` — multiplexes many logical streams (KV read, KV
+  write, weight stream, MoE dispatch) through one network invocation per
+  step, the framework form of the paper's §III-C burst buffering;
+* :class:`PagedKVCache` — the serving engine's KV storage as fixed-size
+  pages over the fabric's banked layout, making slot refill a page remap.
+
+Paper-term ↔ API map
+--------------------
+
+=====================  =====================================================
+Paper (Medusa)         ``repro.fabric``
+=====================  =====================================================
+``N`` (ports)          ``FabricConfig.n_ports`` (default: one per KV head)
+``W_acc``              ``FabricConfig.lane_width`` (elements per port word;
+                       default: ``head_dim``)
+``W_line``             ``FabricConfig.line_width = n_ports * lane_width``
+                       (one timestep across all KV heads)
+transposition network  ``impl="medusa"`` — log₂(N)-stage binary exchange
+(§III-A/B)             (rolls + selects; Pallas kernel on TPU)
+crossbar baseline      ``impl="crossbar"`` — explicit index-gather routing
+(§II)                  (over-provisioned, materialises index tensors)
+semantics oracle       ``impl="oracle"`` — plain reshape/swapaxes
+read network           ``Fabric.read``: line stream → banked port buffers
+write network          ``Fabric.write``: banked port buffers → line stream
+``MaxBurstLen``        ``FabricConfig.burst_len``; cycle model in
+(§III-C)               ``repro.core.burst``; framework form in
+                       ``BurstScheduler``
+§III-E latency         ``Fabric.latency_cycles`` (= N)
+=====================  =====================================================
+
+All implementations are value-identical — the paper's resource/frequency
+contrast becomes the lowered HLO (gather census, bytes accessed), which
+``benchmarks/table2_resource.py`` and ``benchmarks/fabric_unified.py``
+measure.  ``repro.core.interconnect.Interconnect`` remains as a thin
+deprecated shim over :class:`Fabric`.
+"""
+
+from repro.configs.base import FabricConfig, PortSpec
+from repro.fabric.fabric import Fabric
+from repro.fabric.paged_kv import PagedKVCache, PageTable
+from repro.fabric.scheduler import BurstScheduler, SchedulerStats
+
+__all__ = ["Fabric", "FabricConfig", "PortSpec", "BurstScheduler",
+           "SchedulerStats", "PagedKVCache", "PageTable"]

@@ -1,0 +1,130 @@
+"""The ``Fabric``: one object for every memory movement in the framework.
+
+Absorbs the old :class:`repro.core.interconnect.Interconnect` and the ad-hoc
+per-consumer plumbing (KV layout engine in ``models/common.py``, MoE payload
+routing, benchmark drivers).  A ``Fabric`` is built from a
+:class:`repro.configs.base.FabricConfig` and exposes the paper's two data
+transfer networks plus the layout/routing primitives consumers actually use:
+
+* :meth:`read` / :meth:`write` — W_line line stream ↔ N banked port streams
+  (paper §III-A), implementation selected by ``config.impl``;
+* :meth:`swap_minor` — the rectangular layout engine (minor-axes transpose
+  through square exchange-network tiles);
+* :meth:`kv_port_major` — the production KV-cache application: line-major
+  ``[B, T, H, D]`` → port-major ``[B, H, T, D]`` (Pallas kernel on the
+  medusa fabric when enabled);
+* :meth:`route` — explicit index routing for data-dependent traffic (MoE
+  top-k dispatch/combine).  Data-dependent destinations cannot use the
+  static diagonal schedule, so every impl routes through the same gather —
+  the fabric still owns the call so the op census has one choke point.
+
+All impls are value-identical; they differ only in the HLO they lower to,
+which is what the paper's FPGA resource comparison becomes on TPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FabricConfig
+from repro.core import baseline as _b
+from repro.core import transpose as _t
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class Fabric:
+    """A W_line ↔ N x W_acc memory-movement fabric with selectable network."""
+
+    config: FabricConfig
+
+    @classmethod
+    def for_model(cls, cfg) -> "Fabric":
+        """The fabric a :class:`repro.configs.base.ModelConfig` names."""
+        return cls(cfg.resolved_fabric)
+
+    @classmethod
+    def make(cls, n_ports: int, impl: str = "medusa", **kw) -> "Fabric":
+        return cls(FabricConfig(n_ports=n_ports, impl=impl, **kw).validate())
+
+    # -- geometry -------------------------------------------------------------
+    @property
+    def n_ports(self) -> int:
+        return self.config.n_ports
+
+    @property
+    def impl(self) -> str:
+        return self.config.impl
+
+    @property
+    def latency_cycles(self) -> int:
+        """Constant pipeline latency of the transposition unit (§III-E)."""
+        return _t.transposition_latency_cycles(self.config.n_ports)
+
+    # -- the two data-transfer networks (paper §III-A) ------------------------
+    def read(self, lines: jax.Array) -> jax.Array:
+        """Read network: DRAM line stream ``[L, N, W]`` → banked port buffer
+        ``[G, N(word-addr), N(port-lane), W]``."""
+        n = self.config.n_ports
+        if self.impl == "medusa":
+            return _t.read_network_medusa(lines, n)
+        if self.impl == "crossbar":
+            return _b.read_network_crossbar(lines, n)
+        return _t.read_network_oracle(lines, n)
+
+    def write(self, banked: jax.Array) -> jax.Array:
+        """Write network: banked port buffer → DRAM line stream."""
+        n = self.config.n_ports
+        if self.impl == "medusa":
+            return _t.write_network_medusa(banked, n)
+        if self.impl == "crossbar":
+            return _b.write_network_crossbar(banked, n)
+        return _t.write_network_oracle(banked, n)
+
+    # -- layout engine --------------------------------------------------------
+    def swap_minor(self, x: jax.Array) -> jax.Array:
+        """Transpose the two minor axes of ``x`` (rectangular OK) — e.g.
+        KV cache [T, H*D-line] ↔ [H, T-stream] — on the selected network."""
+        if self.impl == "medusa":
+            return _t.medusa_swap_minor(x, tile=self.config.tile)
+        if self.impl == "crossbar":
+            r, c = x.shape[-2], x.shape[-1]
+            i = jax.lax.broadcasted_iota(jnp.int32, x.shape[:-2] + (c, r),
+                                         x.ndim - 2)
+            j = jax.lax.broadcasted_iota(jnp.int32, x.shape[:-2] + (c, r),
+                                         x.ndim - 1)
+            flat = x.reshape(x.shape[:-2] + (r * c,))
+            return jnp.take_along_axis(
+                flat, (j * c + i).reshape(x.shape[:-2] + (c * r,)),
+                axis=-1).reshape(x.shape[:-2] + (c, r))
+        return _t.transpose_oracle(x, x.ndim - 2, x.ndim - 1)
+
+    def kv_port_major(self, c: jax.Array) -> jax.Array:
+        """KV-cache layout engine: line-major ``[B, T, Hkv, D]`` (one timestep
+        = one wide line across heads) → port-major ``[B, Hkv, T, D]`` (one
+        deep-narrow stream per head).  The production read-network
+        application; on the medusa fabric this is the Pallas exchange-network
+        kernel when kernels are enabled.  The "fused" fabric never calls
+        this — its consumers contract against the line-major cache directly.
+        """
+        if self.impl == "medusa" and kops.kernels_enabled():
+            return jax.vmap(kops.kv_line_to_port)(c)
+        if self.impl == "crossbar":
+            # over-provisioned routing: explicit gather through an index tensor
+            b, t, hkv, d = c.shape
+            flat = c.reshape(b, t * hkv, d)
+            idx = (jnp.arange(hkv)[:, None]
+                   + jnp.arange(t)[None, :] * hkv).reshape(-1)
+            return jnp.take(flat, idx, axis=1).reshape(b, hkv, t, d)
+        return jnp.swapaxes(c, 1, 2)
+
+    # -- data-dependent routing ----------------------------------------------
+    def route(self, data: jax.Array, index: jax.Array,
+              axis: int = 0) -> jax.Array:
+        """Gather ``data`` rows through an explicit ``index`` tensor — the
+        crossbar primitive, used where destinations are data-dependent (MoE
+        top-k staging/combine).  Identical across impls by construction."""
+        return jnp.take(data, index, axis=axis)

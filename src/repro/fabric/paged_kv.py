@@ -1,0 +1,129 @@
+"""Paged KV-cache layout for the serving engine.
+
+The engine's batched decode cache is the fabric's banked layout applied to
+time: slot ``s`` owns a deep-narrow region ``[t_max, Hkv, D]`` whose time
+axis is divided into fixed-size **pages** of ``page_size`` timesteps — one
+page = a burst of ``page_size`` DRAM lines (a line is one timestep across
+the N = Hkv ports).  :class:`PagedKVCache` wraps the cache pytree with a
+page table so slot refill is a **page remap**: admission writes only the
+``ceil(prompt / page_size)`` pages the prompt occupies instead of splicing
+the full ``t_max`` region (the seed engine's splice-copy), and retirement
+just returns the slot's pages to the free accounting — the stale frames are
+masked by per-slot positions and overwritten on the next admission.
+
+Only full-depth attention leaves (names ``k``/``v`` with a ``t_max`` time
+axis) are paged.  Ring (sliding-window) KV caches are written rolled by
+prefill, so their window is copied whole; recurrent/SSM state leaves are
+O(1) in time and also copied whole — both are the "control" traffic of the
+fabric, small next to the paged KV payload.
+
+``tokens_moved`` vs ``tokens_moved_dense`` quantifies the win: data actually
+copied at admission vs what the dense splice would have copied.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class PageTable:
+    """Per-slot page accounting: ``used[s]`` pages hold valid tokens."""
+
+    page_size: int
+    pages_per_slot: int
+    n_slots: int
+
+    def __post_init__(self):
+        self.used = np.zeros((self.n_slots,), np.int32)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return min(-(-n_tokens // self.page_size), self.pages_per_slot)
+
+    def map(self, slot: int, n_tokens: int) -> int:
+        self.used[slot] = self.pages_for(n_tokens)
+        return int(self.used[slot])
+
+    def extend(self, slot: int, pos: int) -> None:
+        """Decode grew the sequence to ``pos`` — map pages lazily."""
+        self.used[slot] = max(self.used[slot],
+                              self.pages_for(pos + 1))
+
+    def free(self, slot: int) -> None:
+        self.used[slot] = 0
+
+    @property
+    def occupancy(self) -> float:
+        total = self.n_slots * self.pages_per_slot
+        return float(self.used.sum()) / total if total else 0.0
+
+
+class PagedKVCache:
+    """A batched decode-cache pytree with paged admission.
+
+    ``caches`` is whatever ``api.init_cache(cfg, max_slots, t_max)`` built;
+    the wrapper never changes its structure (the jitted decode step consumes
+    ``.caches`` directly), only how data moves into it.
+    """
+
+    def __init__(self, caches, max_slots: int, t_max: int, page_size: int):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.caches = caches
+        self.max_slots = max_slots
+        self.t_max = t_max
+        self.table = PageTable(page_size=page_size,
+                               pages_per_slot=-(-t_max // page_size),
+                               n_slots=max_slots)
+        self.tokens_moved = 0
+        self.tokens_moved_dense = 0
+
+    # -- admission: page remap instead of full splice -------------------------
+    def refill(self, slot: int, req_cache, n_tokens: int) -> None:
+        """Install a single-request cache into ``slot``, touching only the
+        pages the ``n_tokens``-long prompt occupies."""
+        pages = self.table.map(slot, n_tokens)
+        span = min(pages * self.table.page_size, self.t_max)
+        t_max, max_slots = self.t_max, self.max_slots
+
+        def one(path, batch_leaf, req_leaf):
+            name = _leaf_name(path)
+            baxis = 1 if (batch_leaf.ndim >= 4
+                          and batch_leaf.shape[1] == max_slots) else 0
+            idx = [slice(None)] * batch_leaf.ndim
+            idx[baxis] = slice(slot, slot + 1)
+            taxis = baxis + 1
+            if (name in ("k", "v") and batch_leaf.ndim > taxis
+                    and batch_leaf.shape[taxis] == t_max):
+                idx[taxis] = slice(0, span)
+                req_idx = [slice(None)] * req_leaf.ndim
+                req_idx[taxis] = slice(0, span)
+                return batch_leaf.at[tuple(idx)].set(req_leaf[tuple(req_idx)])
+            return batch_leaf.at[tuple(idx)].set(req_leaf)
+
+        self.caches = jax.tree_util.tree_map_with_path(
+            one, self.caches, req_cache)
+        self.tokens_moved += span
+        self.tokens_moved_dense += self.t_max
+
+    # -- decode-time bookkeeping ----------------------------------------------
+    def update(self, new_caches) -> None:
+        """Adopt the cache pytree returned by the jitted decode step."""
+        self.caches = new_caches
+
+    def extend(self, slot: int, pos: int) -> None:
+        self.table.extend(slot, pos)
+
+    def free(self, slot: int) -> None:
+        self.table.free(slot)
+
+
+def _leaf_name(path) -> str:
+    names: List[str] = [getattr(k, "key", getattr(k, "name", None))
+                        for k in path
+                        if hasattr(k, "key") or hasattr(k, "name")]
+    return names[-1] if names else ""

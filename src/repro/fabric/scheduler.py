@@ -1,0 +1,147 @@
+"""Burst scheduler: many logical streams, one network invocation per step.
+
+The paper's burst machinery (§III-C: MaxBurstLen-deep banks, per-port
+head/tail pointers, interference-free progress — modelled cycle-by-cycle in
+:mod:`repro.core.burst`) exists so that *independent* traffic shares one
+physical transposition network.  This module is the framework-level
+generalisation: consumers (KV read, KV write, weight stream, MoE expert
+dispatch) declare logical streams against a shared :class:`Fabric`; at each
+step the scheduler concatenates every queued stream into one burst, runs the
+read (resp. write) network **once**, and hands each consumer its slice back.
+
+Value identity is exact: the read network transposes each N-line group
+independently, every stream contributes whole groups, and narrower streams
+are zero-padded on the word axis and sliced back after the transfer (the
+words of a line move independently through the network).  Streams of
+different dtypes cannot share a burst bit-identically, so the scheduler
+keeps one burst per dtype.
+
+``stats`` counts network invocations vs streams served, which is exactly the
+contrast ``benchmarks/fabric_unified.py`` measures against per-consumer
+:class:`Fabric` calls.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PortSpec
+from repro.fabric.fabric import Fabric
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    streams_served: int = 0
+    network_calls: int = 0
+
+    @property
+    def calls_saved(self) -> int:
+        return self.streams_served - self.network_calls
+
+
+@dataclasses.dataclass
+class _Queued:
+    spec: PortSpec
+    payload: jax.Array            # lines [L, N, *rest] or banked [G, N, N, *rest]
+    rest_shape: Tuple[int, ...]
+    words: int                    # prod(rest) — flattened word width
+
+
+class BurstScheduler:
+    """Batch queued read/write streams through one network call per flush."""
+
+    def __init__(self, fabric: Fabric):
+        self.fabric = fabric
+        self.stats = SchedulerStats()
+        self._reads: List[_Queued] = []
+        self._writes: List[_Queued] = []
+
+    # -- enqueue ---------------------------------------------------------------
+    def _check_name(self, name: str) -> None:
+        # flush() keys results by stream name; a duplicate (even read vs
+        # write) would silently shadow one result
+        if any(q.spec.name == name for q in self._reads + self._writes):
+            raise ValueError(
+                f"stream {name!r} already queued for this flush; give each "
+                f"logical port a distinct name (e.g. 'kv_read'/'kv_write')")
+
+    def enqueue_read(self, name: str, lines: jax.Array) -> PortSpec:
+        """Queue a line stream ``[L, N, *rest]`` (L a multiple of N) for the
+        read network.  Returns the :class:`PortSpec` keying the result."""
+        n = self.fabric.n_ports
+        if lines.ndim < 2 or lines.shape[1] != n or lines.shape[0] % n:
+            raise ValueError(
+                f"stream {name!r}: want [k*N, N, ...] lines for N={n}, "
+                f"got {lines.shape}")
+        self._check_name(name)
+        spec = PortSpec(name=name, direction="read")
+        rest = tuple(lines.shape[2:])
+        self._reads.append(_Queued(spec, lines, rest, _prod(rest)))
+        return spec
+
+    def enqueue_write(self, name: str, banked: jax.Array) -> PortSpec:
+        """Queue a banked buffer ``[G, N, N, *rest]`` for the write network."""
+        n = self.fabric.n_ports
+        if banked.ndim < 3 or banked.shape[1] != n or banked.shape[2] != n:
+            raise ValueError(
+                f"stream {name!r}: want [G, N, N, ...] banked for N={n}, "
+                f"got {banked.shape}")
+        self._check_name(name)
+        spec = PortSpec(name=name, direction="write")
+        rest = tuple(banked.shape[3:])
+        self._writes.append(_Queued(spec, banked, rest, _prod(rest)))
+        return spec
+
+    # -- one scheduler step ----------------------------------------------------
+    def flush(self) -> Dict[str, jax.Array]:
+        """Run the queued traffic: one read-network call and one write-network
+        call per dtype present, then scatter results back per stream name."""
+        out: Dict[str, jax.Array] = {}
+        out.update(self._flush_direction(self._reads, read=True))
+        out.update(self._flush_direction(self._writes, read=False))
+        self._reads, self._writes = [], []
+        return out
+
+    def _flush_direction(self, queue: List[_Queued],
+                         read: bool) -> Dict[str, jax.Array]:
+        n = self.fabric.n_ports
+        out: Dict[str, jax.Array] = {}
+        by_dtype: Dict[object, List[_Queued]] = {}
+        for q in queue:
+            by_dtype.setdefault(jnp.dtype(q.payload.dtype), []).append(q)
+        for streams in by_dtype.values():
+            self.stats.streams_served += len(streams)
+            self.stats.network_calls += 1
+            w_max = max(q.words for q in streams)
+            flat = []
+            for q in streams:
+                lead = q.payload.shape[:2] if read else q.payload.shape[:3]
+                x = q.payload.reshape(lead + (q.words,))
+                if q.words < w_max:
+                    pad = [(0, 0)] * (x.ndim - 1) + [(0, w_max - q.words)]
+                    x = jnp.pad(x, pad)
+                flat.append(x)
+            burst = jnp.concatenate(flat, axis=0)
+            moved = self.fabric.read(burst) if read else self.fabric.write(burst)
+            # split back: stream i covers groups [off, off + L_i/N) (read) or
+            # lines [off, off + G_i*N) (write)
+            off = 0
+            for q in streams:
+                count = (q.payload.shape[0] // n if read
+                         else q.payload.shape[0] * n)
+                piece = moved[off:off + count]
+                off += count
+                piece = piece[..., :q.words]
+                out[q.spec.name] = piece.reshape(piece.shape[:-1] + q.rest_shape)
+        return out
+
+
+def _prod(shape: Tuple[int, ...]) -> int:
+    p = 1
+    for s in shape:
+        p *= s
+    return p

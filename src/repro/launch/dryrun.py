@@ -78,6 +78,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         t_compile = time.time() - t0 - t_lower
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):      # older jax: one dict per device
+        cost = cost[0] if cost else {}
     costs = analyze_hlo(compiled.as_text())
     roof = roofline_terms(costs, chips, PEAK_FLOPS_BF16, HBM_BW, ICI_BW)
     mf = model_flops(cfg, shape)

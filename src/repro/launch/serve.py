@@ -1,8 +1,11 @@
 """Serving driver: ``python -m repro.launch.serve --arch <id> [...]``.
 
 Batched request serving: prefill installs the line-major KV caches, the
-decode loop reads them through the Medusa interconnect (``cfg.kv_layout``).
-``--smoke`` runs the reduced config on CPU with real tokens.
+decode loop reads them through the model's fabric (``cfg.resolved_fabric``;
+override with ``--fabric-impl``).  ``--smoke`` runs the reduced config on
+CPU with real tokens; ``--engine`` serves through the continuous-batching
+:class:`repro.serving.ServingEngine` on the paged KV layout instead of the
+one-shot batch generate.
 """
 
 from __future__ import annotations
@@ -27,13 +30,27 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=32)
-    ap.add_argument("--kv-layout", default=None,
-                    choices=[None, "medusa", "crossbar", "oracle"])
+    ap.add_argument("--kv-layout", "--fabric-impl", dest="kv_layout",
+                    default=None,
+                    choices=[None, "medusa", "crossbar", "oracle", "fused"])
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="KV page size in timesteps (0 = fabric default)")
+    ap.add_argument("--engine", action="store_true",
+                    help="serve through the paged continuous-batching engine")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     if args.kv_layout:
         cfg = dataclasses.replace(cfg, kv_layout=args.kv_layout)
+        if cfg.fabric is not None:   # explicit fabric: keep the switch single
+            cfg = dataclasses.replace(
+                cfg, fabric=dataclasses.replace(cfg.fabric,
+                                                impl=args.kv_layout))
+    if args.page_size:
+        cfg = dataclasses.replace(
+            cfg, fabric=dataclasses.replace(cfg.resolved_fabric,
+                                            page_size=args.page_size))
+    fab = cfg.resolved_fabric
 
     data = SyntheticLM(cfg, batch=args.batch,
                        seq=args.prompt_len + (cfg.n_patches or 0))
@@ -42,17 +59,35 @@ def main():
     params = api.init_params(cfg, jax.random.PRNGKey(0))
 
     t_max = args.prompt_len + args.gen_len + (cfg.n_patches or 0)
-    t0 = time.time()
-    extra = {k: batch[k] for k in ("patch_embeds", "frames") if k in batch}
-    out = api.greedy_generate(params, batch["tokens"], cfg,
-                              steps=args.gen_len, t_max=t_max, extra=extra)
-    out = np.asarray(out)
-    dt = time.time() - t0
-    print(f"arch={cfg.name} kv_layout={cfg.kv_layout} "
+    print(f"arch={cfg.name} fabric=[impl={fab.impl} N={fab.n_ports} "
+          f"W_acc={fab.lane_width} page={fab.page_size}] "
           f"batch={args.batch} prompt={args.prompt_len} gen={args.gen_len}")
-    print(f"generated {out.shape} in {dt:.2f}s "
-          f"({args.batch * args.gen_len / dt:.1f} tok/s)")
-    print("sample:", out[0][:16].tolist())
+    t0 = time.time()
+    if args.engine:
+        from repro.serving import Request, ServingEngine
+        eng = ServingEngine(cfg, params, max_slots=args.batch, t_max=t_max)
+        prompts = np.asarray(batch["tokens"])
+        reqs = [Request(i, prompts[i], max_new_tokens=args.gen_len)
+                for i in range(args.batch)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_to_completion()
+        dt = time.time() - t0
+        kv = eng.kv
+        print(f"served {args.batch} requests in {dt:.2f}s "
+              f"({args.batch * args.gen_len / dt:.1f} tok/s); "
+              f"admission moved {kv.tokens_moved} of "
+              f"{kv.tokens_moved_dense} dense-splice timesteps")
+        print("sample:", reqs[0].generated[:16])
+    else:
+        extra = {k: batch[k] for k in ("patch_embeds", "frames") if k in batch}
+        out = api.greedy_generate(params, batch["tokens"], cfg,
+                                  steps=args.gen_len, t_max=t_max, extra=extra)
+        out = np.asarray(out)
+        dt = time.time() - t0
+        print(f"generated {out.shape} in {dt:.2f}s "
+              f"({args.batch * args.gen_len / dt:.1f} tok/s)")
+        print("sample:", out[0][:16].tolist())
 
 
 if __name__ == "__main__":

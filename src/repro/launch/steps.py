@@ -17,7 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.configs.base import (FabricConfig, ModelConfig, ShapeConfig,
+                                TrainConfig)
 from repro.data.pipeline import make_batch_specs
 from repro.models import api
 from repro.optim import OptState, init_opt_state, adamw_update
@@ -56,6 +57,28 @@ PARAM_AXES_1D = {
 EXTRA_RULES = {"attn_io": "model", "inner_out": None, "moe_ff": None}
 EXTRA_RULES_MOE_CAP = {"attn_io": "model", "inner_out": None,
                        "moe_ff": "model"}
+
+
+def resolve_fabric(cfg: ModelConfig, shape: ShapeConfig) -> FabricConfig:
+    """Validate the model's fabric against a serving shape at build time.
+
+    The decode cache is a [B, T, Hkv, D] line stream whose line width must
+    be the fabric's W_line (one timestep across the port heads) — catching
+    geometry errors here costs nothing; inside the jitted step they surface
+    as shape errors deep in the layer scan.  Pure validator: page clamping
+    to the cache depth happens where pages are allocated
+    (``ServingEngine.__init__``).
+    """
+    del shape
+    fab = cfg.resolved_fabric
+    has_attn = any(t in ("A", "L") for t in cfg.layer_types())
+    if cfg.fabric is not None and has_attn and cfg.n_kv_heads:
+        want = cfg.n_kv_heads * cfg.resolved_head_dim
+        if fab.line_width != want:
+            raise ValueError(
+                f"{cfg.name}: fabric W_line={fab.line_width} does not match "
+                f"the KV line (n_kv_heads*head_dim={want})")
+    return fab
 
 
 def make_sharder(cfg: ModelConfig, mesh) -> Sharder:
@@ -249,6 +272,7 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
 
 
 def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh) -> BuiltStep:
+    resolve_fabric(cfg, shape)
     sharder = make_sharder(cfg, mesh)
     t_max = shape.seq_len
 
@@ -280,7 +304,9 @@ def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh) -> BuiltStep:
 
 def build_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh) -> BuiltStep:
     """One decode step against a seq_len-deep KV cache (the serve_step that
-    ``decode_*``/``long_*`` cells lower)."""
+    ``decode_*``/``long_*`` cells lower).  The cache is read through the
+    model's fabric (``resolve_fabric`` checks the geometry up front)."""
+    resolve_fabric(cfg, shape)
     sharder = make_sharder(cfg, mesh)
     t_max = shape.seq_len
 

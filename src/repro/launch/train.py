@@ -29,9 +29,8 @@ from repro.runtime import TrainingRunner, StragglerDetector, FaultInjector
 
 def make_mesh_for(args):
     if args.smoke:
-        return jax.sharding.Mesh(
-            np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import compat_mesh
+        return compat_mesh(jax.devices()[:1], (1, 1), ("data", "model"))
     from repro.launch.mesh import make_production_mesh
     return make_production_mesh(multi_pod=args.multi_pod)
 

@@ -15,8 +15,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.fabric.fabric import Fabric
 from repro.parallel.sharding import shard
-from repro.kernels import ops as kops
 
 
 # ----------------------------------------------------------------------------
@@ -241,17 +241,9 @@ def attention_apply(p, x, cfg, *, positions, layer_kind: str,
 
 
 def _kv_port_major(c: jax.Array, cfg) -> jax.Array:
-    """[B, T, Hkv, D] line-major → [B, Hkv, T, D] port-major via the
-    configured interconnect fabric (medusa kernel / crossbar / oracle)."""
-    if cfg.kv_layout == "medusa" and kops.kernels_enabled():
-        return jax.vmap(kops.kv_line_to_port)(c)
-    if cfg.kv_layout == "crossbar":
-        # over-provisioned routing: explicit gather through an index tensor
-        b, t, hkv, d = c.shape
-        flat = c.reshape(b, t * hkv, d)
-        idx = (jnp.arange(hkv)[:, None] + jnp.arange(t)[None, :] * hkv).reshape(-1)
-        return jnp.take(flat, idx, axis=1).reshape(b, hkv, t, d)
-    return jnp.swapaxes(c, 1, 2)
+    """[B, T, Hkv, D] line-major → [B, Hkv, T, D] port-major via the model's
+    fabric (medusa kernel / crossbar / oracle — ``cfg.resolved_fabric``)."""
+    return Fabric.for_model(cfg).kv_port_major(c)
 
 
 def _cache_write(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
@@ -271,8 +263,9 @@ def _expand_mask(mask: jax.Array) -> jax.Array:
 
 
 def cached_attention(q, ck, cv, pos, kv_pos, valid, window, cfg):
-    """Decode attention over a line-major cache, dispatching on the
-    configured interconnect fabric.
+    """Decode attention over a line-major cache, dispatching on the model's
+    fabric (``cfg.resolved_fabric.impl`` — the single switch, whether named
+    by ``kv_layout`` or an explicit ``FabricConfig``).
 
     ``medusa``/``crossbar``/``oracle``: re-bank the cache to port-major head
     streams first (the paper's read network; on TPU the medusa form is the
@@ -281,12 +274,13 @@ def cached_attention(q, ck, cv, pos, kv_pos, valid, window, cfg):
     layout conversion happens implicitly in the MXU operand load), halving
     cache HBM traffic per step.  All fabrics are value-identical.
     """
-    if cfg.kv_layout == "fused":
+    fabric = Fabric.for_model(cfg)
+    if fabric.impl == "fused":
         ck = shard(ck, "batch", "kv_seq", "kv_heads", "head_dim")
         cv = shard(cv, "batch", "kv_seq", "kv_heads", "head_dim")
         return _decode_attention_linemajor(q, ck, cv, pos, kv_pos, valid,
                                            window)
-    ck_p, cv_p = _kv_port_major(ck, cfg), _kv_port_major(cv, cfg)
+    ck_p, cv_p = fabric.kv_port_major(ck), fabric.kv_port_major(cv)
     ck_p = shard(ck_p, "batch", "kv_heads", "kv_seq", "head_dim")
     cv_p = shard(cv_p, "batch", "kv_heads", "kv_seq", "head_dim")
     return _decode_attention(q, ck_p, cv_p, pos, kv_pos, valid, window)

@@ -16,6 +16,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.fabric.fabric import Fabric
 from repro.models.common import dense_init
 from repro.parallel.sharding import shard
 
@@ -44,6 +45,7 @@ def moe_apply(p, x: jax.Array, cfg) -> jax.Array:
     sharding divisibility improves.
     """
     m = cfg.moe
+    fabric = Fabric.for_model(cfg)
     e_pad = m.n_experts_padded
     b, s, d = x.shape
     t = b * s
@@ -69,12 +71,13 @@ def moe_apply(p, x: jax.Array, cfg) -> jax.Array:
     # Dispatch moves PAYLOAD with gathers only: the scatter touches 4-byte
     # indices, never the d-wide activations (a payload scatter lowers to
     # full-width routing — the crossbar again; see EXPERIMENTS.md §Perf).
+    # The gather itself is the fabric's routing primitive.
     inv = jnp.full((e_pad * cap,), t * m.top_k, jnp.int32)
     inv = inv.at[slot].set(jnp.arange(t * m.top_k, dtype=jnp.int32),
                            mode="drop")                           # [E*C]
     slot_valid = inv < t * m.top_k
     src_tok = jnp.clip(inv // m.top_k, 0, t - 1)
-    buf = jnp.where(slot_valid[:, None], jnp.take(xt, src_tok, axis=0), 0)
+    buf = jnp.where(slot_valid[:, None], fabric.route(xt, src_tok), 0)
     buf = buf.reshape(e_pad, cap, d)
     buf = shard(buf, "experts", "expert_cap", "d_model")
 
@@ -88,8 +91,8 @@ def moe_apply(p, x: jax.Array, cfg) -> jax.Array:
     # combine: gather per assignment, weight, and reduce over the (static,
     # consecutive) top-k axis by reshape+sum — no scatter-add.
     gathered = jnp.where(keep[:, None],
-                         jnp.take(y, jnp.clip(slot, 0, e_pad * cap - 1),
-                                  axis=0), 0)
+                         fabric.route(y, jnp.clip(slot, 0, e_pad * cap - 1)),
+                         0)
     w = top_p.reshape(-1)[:, None].astype(x.dtype)
     out = (gathered * w).reshape(t, m.top_k, d).sum(axis=1)
     return out.reshape(b, s, d)

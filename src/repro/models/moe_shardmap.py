@@ -27,7 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.parallel.collectives import ring_all_to_all
+from repro.fabric.fabric import Fabric
+from repro.parallel.collectives import axis_size, ring_all_to_all
 
 
 def moe_apply_shardmap(p, x: jax.Array, cfg, axis_name: str = "model"):
@@ -37,7 +38,8 @@ def moe_apply_shardmap(p, x: jax.Array, cfg, axis_name: str = "model"):
     experts ``[e_loc, ...]``.  Returns ``[B_loc, S, d]``.
     """
     m = cfg.moe
-    n = lax.axis_size(axis_name)
+    fabric = Fabric.for_model(cfg)
+    n = axis_size(axis_name)
     e_total = m.n_experts_padded
     e_loc = e_total // n
     b, s, d = x.shape
@@ -62,13 +64,15 @@ def moe_apply_shardmap(p, x: jax.Array, cfg, axis_name: str = "model"):
     keep = rank_in_e < cap
     slot = jnp.where(keep, a * cap + rank_in_e, e_total * cap)
 
-    # gather-only payload staging into [E_total * cap, d] send blocks
+    # gather-only payload staging into [E_total * cap, d] send blocks; the
+    # payload moves through the fabric's routing primitive (data-dependent
+    # destinations — the one consumer that genuinely needs a crossbar hop)
     inv = jnp.full((e_total * cap,), t * m.top_k, jnp.int32)
     inv = inv.at[slot].set(jnp.arange(t * m.top_k, dtype=jnp.int32),
                            mode="drop")
     valid_slot = inv < t * m.top_k
     src_tok = jnp.clip(inv // m.top_k, 0, t - 1)
-    send = jnp.where(valid_slot[:, None], jnp.take(xt, src_tok, axis=0), 0)
+    send = jnp.where(valid_slot[:, None], fabric.route(xt, src_tok), 0)
 
     # 2. ring exchange: block r = the cap*e_loc slots destined to rank r
     send_blocks = send.reshape(n, e_loc * cap, d)
@@ -89,8 +93,8 @@ def moe_apply_shardmap(p, x: jax.Array, cfg, axis_name: str = "model"):
 
     # local combine (gather + static top-k reduce)
     gathered = jnp.where(keep[:, None],
-                         jnp.take(y_full, jnp.clip(slot, 0, e_total * cap - 1),
-                                  axis=0), 0)
+                         fabric.route(y_full,
+                                      jnp.clip(slot, 0, e_total * cap - 1)), 0)
     w = top_p.reshape(-1)[:, None].astype(x.dtype)
     out = (gathered * w).reshape(t, m.top_k, d).sum(axis=1)
     return out.reshape(b, s, d).astype(x.dtype)

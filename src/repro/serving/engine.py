@@ -1,12 +1,16 @@
-"""Slot-based continuous-batching serving engine.
+"""Slot-based continuous-batching serving engine on the paged KV layout.
 
 A fixed decode batch of ``max_slots`` sequences advances one token per step;
 finished sequences retire and their slots are immediately refilled from the
-queue (prefill splices the new request's KV into the batched cache at the
-slot index).  Per-slot positions are first-class in the decode path
-(``models.common._cache_write`` and friends), so slots at different depths
-coexist in one batched step — the production pattern behind vLLM-style
-serving, on top of the Medusa KV layout engine.
+queue.  KV storage goes through :class:`repro.fabric.PagedKVCache`: each
+slot's time axis is divided into fixed-size pages (``page_size`` timesteps =
+a burst of lines through the fabric), and admission writes only the pages
+the new prompt occupies — a page remap instead of the seed engine's full
+``t_max`` splice-copy.  Per-slot positions are first-class in the decode
+path (``models.common._cache_write`` and friends), so slots at different
+depths coexist in one batched step — the production pattern behind
+vLLM-style serving, on top of the Medusa KV layout engine
+(``cfg.resolved_fabric``).
 
 Decoder-only families (dense/moe/ssm/hybrid/vlm); greedy sampling.
 """
@@ -21,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.fabric import PagedKVCache
 from repro.models import api
 from repro.models import lm
 
@@ -35,13 +40,16 @@ class Request:
 
 
 class ServingEngine:
-    def __init__(self, cfg: ModelConfig, params, max_slots: int, t_max: int):
+    def __init__(self, cfg: ModelConfig, params, max_slots: int, t_max: int,
+                 page_size: int = 0):
         assert cfg.family != "audio", "engine covers decoder-only families"
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
         self.t_max = t_max
-        self.caches = api.init_cache(cfg, max_slots, t_max)
+        self.kv = PagedKVCache(
+            api.init_cache(cfg, max_slots, t_max), max_slots, t_max,
+            page_size or min(cfg.resolved_fabric.page_size, t_max))
         self.pos = np.zeros((max_slots,), np.int32)      # next write position
         self.active: List[Optional[Request]] = [None] * max_slots
         self.tokens = np.zeros((max_slots, 1), np.int32)
@@ -49,6 +57,11 @@ class ServingEngine:
 
         self._decode = jax.jit(
             lambda p, tok, caches, pos: api.decode_fn(p, tok, caches, pos, cfg))
+
+    @property
+    def caches(self):
+        """The batched cache pytree (lives inside the paged wrapper)."""
+        return self.kv.caches
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -62,23 +75,13 @@ class ServingEngine:
             prompt = jnp.asarray(req.prompt)[None, :]
             logits, req_cache = api.prefill_fn(
                 self.params, {"tokens": prompt}, self.cfg, self.t_max)
-            self._splice(req_cache, slot)
+            # page remap: only the pages the prompt occupies move
+            self.kv.refill(slot, req_cache, len(req.prompt))
             self.active[slot] = req
             self.pos[slot] = len(req.prompt)
             first = int(np.argmax(np.asarray(logits[0, -1])))
             req.generated.append(first)
             self.tokens[slot, 0] = first
-
-    def _splice(self, req_cache, slot: int) -> None:
-        """Insert a single-request cache into the batch cache at ``slot``."""
-        def one(batch_leaf, req_leaf):
-            # batch dim is axis 1 for stacked 'unit' leaves, axis 0 for tail
-            axis = 1 if batch_leaf.ndim >= 4 and batch_leaf.shape[1] == \
-                self.max_slots else 0
-            idx = [slice(None)] * batch_leaf.ndim
-            idx[axis] = slice(slot, slot + 1)
-            return batch_leaf.at[tuple(idx)].set(req_leaf)
-        self.caches = jax.tree.map(one, self.caches, req_cache)
 
     # -- one engine step -----------------------------------------------------
     def step(self) -> int:
@@ -87,22 +90,24 @@ class ServingEngine:
         live = [s for s in range(self.max_slots) if self.active[s] is not None]
         if not live:
             return 0
-        logits, self.caches = self._decode(
-            self.params, jnp.asarray(self.tokens), self.caches,
+        logits, new_caches = self._decode(
+            self.params, jnp.asarray(self.tokens), self.kv.caches,
             jnp.asarray(self.pos))
+        self.kv.update(new_caches)
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
         for s in live:
             req = self.active[s]
             self.pos[s] += 1
+            self.kv.extend(s, int(self.pos[s]))
             req.generated.append(int(nxt[s]))
             self.tokens[s, 0] = int(nxt[s])
             if (len(req.generated) >= req.max_new_tokens
                     or self.pos[s] + 1 >= self.t_max):
                 req.done = True
                 self.active[s] = None
-        # idle slots keep position 0 and a dummy token; their cache rows are
-        # garbage but masked out by their own (stale) positions — they are
-        # overwritten at admission.
+                # return the slot's pages; stale frames are masked by the
+                # per-slot positions and overwritten on the next admission
+                self.kv.free(s)
         return len([s for s in range(self.max_slots)
                     if self.active[s] is not None])
 

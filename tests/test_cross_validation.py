@@ -5,7 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.core import medusa_transpose, medusa_transpose_cycle_accurate
 from repro.core.burst import MedusaReadSim

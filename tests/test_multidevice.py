@@ -24,11 +24,12 @@ def test_ring_all_to_all_equals_xla():
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.parallel.collectives import ring_all_to_all, xla_all_to_all
-mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import compat_shard_map, make_mesh
+mesh = make_mesh((8,), ("x",))
 x = jax.random.normal(jax.random.PRNGKey(0), (64, 4))
-ring = jax.shard_map(lambda a: ring_all_to_all(a, "x"), mesh=mesh,
+ring = compat_shard_map(lambda a: ring_all_to_all(a, "x"), mesh=mesh,
                      in_specs=P("x"), out_specs=P("x"))
-xla = jax.shard_map(lambda a: xla_all_to_all(a, "x"), mesh=mesh,
+xla = compat_shard_map(lambda a: xla_all_to_all(a, "x"), mesh=mesh,
                     in_specs=P("x"), out_specs=P("x"))
 np.testing.assert_allclose(np.asarray(ring(x)), np.asarray(xla(x)))
 print("OK")
@@ -41,14 +42,15 @@ def test_shard_map_dp_with_compression():
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.parallel.collectives import dp_grad_mean
-mesh = jax.make_mesh((8,), ("dp",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import compat_shard_map, make_mesh
+mesh = make_mesh((8,), ("dp",))
 w = jnp.ones((16,))
 def step(w, xb):
     # params enter as an explicit replicated input (realistic DP pattern)
     g = jax.grad(lambda w: jnp.sum((xb @ w.reshape(16, 1)) ** 2))(w)
     return dp_grad_mean({"w": g}, "dp", compression="int8")["w"]
 x = jax.random.normal(jax.random.PRNGKey(0), (32, 16))
-out = jax.shard_map(step, mesh=mesh, in_specs=(P(), P("dp")),
+out = compat_shard_map(step, mesh=mesh, in_specs=(P(), P("dp")),
                     out_specs=P(), check_vma=False)(w, x)
 ref = jax.grad(lambda w: jnp.mean(jax.vmap(
     lambda xb: jnp.sum((xb @ w.reshape(16, 1)) ** 2))(x.reshape(8, 4, 16))))(w)

@@ -2,7 +2,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.core import (medusa_transpose, read_network_medusa,
                         write_network_medusa, read_network_oracle,

@@ -2,7 +2,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.core import (barrel_rotate, index_twist, baseline_mux_count,
                         medusa_mux_count, mux_reduction, rotation_depth)

@@ -10,6 +10,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import get_smoke
 from repro.configs.base import TrainConfig, ShapeConfig
 from repro.data import SyntheticLM
+from repro.launch.mesh import compat_mesh
 from repro.launch.steps import (build_train_step, build_prefill_step,
                                 build_decode_step, make_sharder, param_specs,
                                 zero1_specs, _eval_params)
@@ -18,9 +19,7 @@ from repro.parallel.sharding import Sharder, rules_for
 
 
 def _mesh11():
-    return jax.sharding.Mesh(
-        np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_mesh(jax.devices()[:1], (1, 1), ("data", "model"))
 
 
 def test_spec_mapping():
@@ -48,9 +47,7 @@ def test_param_specs_cover_tree():
 
 
 def test_zero1_adds_data_axis():
-    mesh = jax.sharding.Mesh(
-        np.asarray(jax.devices() * 1)[:1].reshape(1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_mesh(jax.devices()[:1], (1, 1), ("data", "model"))
     # fake 4-way data mesh via rules only (structure test, mesh is 1x1)
     cfg = get_smoke("stablelm-1.6b")
     sharder = make_sharder(cfg, mesh)
