@@ -3,22 +3,38 @@
 The refactor claim measured: before, every consumer (KV read, weight
 stream, MoE dispatch staging, host batch staging) ran its own
 ``Interconnect`` call — one read-network lowering each.  After, the
-:class:`repro.fabric.BurstScheduler` concatenates all queued streams and
-invokes the shared network once per dtype.  We lower both forms over the
-same traffic and compare total HLO ops, gather census, and CPU wall time,
-for the medusa and crossbar fabrics.
+:class:`repro.fabric.BurstScheduler` merges all queued streams and invokes
+the shared network once per dtype.  Two burst layouts are A/B'd on the same
+4-stream mixed-width traffic:
 
-Semantics are asserted identical before measuring.
+* ``packed`` (default) — streams fold their line groups into the word axis
+  and concatenate along words: the network moves zero padding;
+* ``pad`` — pad-to-widest line-axis concatenation (PR 1's layout, kept as
+  the fallback that shows why packing matters: the padded words it moves
+  cost real wall-clock).
+
+We lower all forms over the same traffic and compare total HLO ops, gather
+census, CPU wall time, and words moved vs padded, for the medusa and
+crossbar fabrics.  Semantics are asserted identical before measuring, and
+the unified forms run through the issue()/commit() pipeline.  Results also
+land in ``BENCH_fabric.json`` (dir from ``$BENCH_DIR``, default cwd) — the
+perf-trajectory artifact.
+
+    python -m benchmarks.fabric_unified [--pack {packed,pad,both}]
 """
 
 from __future__ import annotations
+
+import argparse
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.data.pipeline import batch_lines
-from repro.fabric import BurstScheduler, Fabric
+from repro.fabric import BurstScheduler, Fabric, SchedulerStats
 from benchmarks.common import emit, time_us, hlo_op_census
 
 N = 8            # ports
@@ -36,8 +52,15 @@ def _traffic():
     return kv, wt, moe, stage
 
 
-def _fns(impl: str):
-    fab = Fabric.make(N, impl)
+def _enqueue_all(sched, kv, wt, moe, stage):
+    sched.enqueue_read("kv_read", kv)
+    sched.enqueue_read("weight_stream", wt)
+    sched.enqueue_read("moe_dispatch", moe)
+    sched.enqueue_read("batch_stage", stage)
+
+
+def _fns(impl: str, pack: str):
+    fab = Fabric.make(N, impl, pack=pack)
 
     def per_consumer(kv, wt, moe, stage):
         # seed style: one network call per consumer
@@ -45,38 +68,70 @@ def _fns(impl: str):
 
     def unified(kv, wt, moe, stage):
         sched = BurstScheduler(fab)
-        sched.enqueue_read("kv_read", kv)
-        sched.enqueue_read("weight_stream", wt)
-        sched.enqueue_read("moe_dispatch", moe)
-        sched.enqueue_read("batch_stage", stage)
-        out = sched.flush()
+        _enqueue_all(sched, kv, wt, moe, stage)
+        sched.issue()                      # transfer overlaps consumer compute
+        out = sched.commit()
         return (out["kv_read"], out["weight_stream"], out["moe_dispatch"],
                 out["batch_stage"])
 
     return jax.jit(per_consumer), jax.jit(unified)
 
 
-def run() -> list:
+def _word_census(impl: str, pack: str, args) -> SchedulerStats:
+    stats = SchedulerStats()
+    sched = BurstScheduler(Fabric.make(N, impl, pack=pack), stats=stats)
+    _enqueue_all(sched, *args)
+    sched.flush()
+    return stats
+
+
+def run(packs=("packed", "pad")) -> list:
     args = _traffic()
     rows = []
+    artifact = {"workload": {"n_ports": N, "streams": 4,
+                             "words": [D, 32, 16, 1], "dtype": "bfloat16"}}
     for impl in ("medusa", "crossbar"):
-        per, uni = _fns(impl)
-        a, b = per(*args), uni(*args)
-        for x, y in zip(a, b):
-            assert np.array_equal(np.asarray(x, np.float32),
-                                  np.asarray(y, np.float32))
-        for name, fn in (("per_consumer", per), ("unified", uni)):
+        variants = []
+        per, _ = _fns(impl, "packed")
+        variants.append(("per_consumer", per, None))
+        for pack in packs:
+            _, uni = _fns(impl, pack)
+            variants.append((f"unified_{pack}", uni, pack))
+        ref = variants[0][1](*args)
+        for name, fn, pack in variants:
+            for x, y in zip(ref, fn(*args)):
+                assert np.array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
             census = hlo_op_census(fn, *args)
             gathers = (census.get("gather", 0) + census.get("dynamic-slice", 0)
                        + census.get("scatter", 0))
-            rows.append((f"fabric_unified/{impl}/{name}/us",
-                         time_us(fn, *args), ""))
-            rows.append((f"fabric_unified/{impl}/{name}/total_hlo_ops", None,
-                         sum(census.values())))
-            rows.append((f"fabric_unified/{impl}/{name}/gather_ops", None,
-                         gathers))
+            cell = {"us": time_us(fn, *args),
+                    "total_hlo_ops": sum(census.values()),
+                    "gather_ops": gathers}
+            if pack is not None:
+                stats = _word_census(impl, pack, args)
+                cell["network_calls"] = stats.network_calls
+                cell["words_moved"] = stats.words_moved
+                cell["words_padded"] = stats.words_padded
+            else:
+                cell["network_calls"] = 4
+                cell["words_moved"] = sum(
+                    int(np.prod(a.shape)) for a in args)
+                cell["words_padded"] = 0
+            artifact[f"{impl}/{name}"] = cell
+            for key, val in cell.items():
+                rows.append((f"fabric_unified/{impl}/{name}/{key}",
+                             val if key == "us" else None,
+                             "" if key == "us" else val))
+    path = os.path.join(os.environ.get("BENCH_DIR", "."), "BENCH_fabric.json")
+    with open(path, "w") as f:
+        json.dump(artifact, f, indent=2, sort_keys=True)
     return rows
 
 
 if __name__ == "__main__":
-    emit(run())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pack", choices=["packed", "pad", "both"],
+                    default="both", help="burst layout(s) to A/B")
+    a = ap.parse_args()
+    emit(run(("packed", "pad") if a.pack == "both" else (a.pack,)))

@@ -45,11 +45,32 @@ for impl in ("crossbar", "oracle"):
 print("medusa == crossbar == oracle (identical transfer semantics)")
 
 # 5. Many logical streams, one network invocation: the burst scheduler.
+#    Streams pack along the word axis — each PortSpec records its (offset,
+#    words) extent in the shared burst, and the network moves zero padding.
 sched = BurstScheduler(fabric)
-sched.enqueue_read("kv_read", lines)
-sched.enqueue_read("weight_stream",
-                   jax.random.normal(jax.random.PRNGKey(1), (16, 8, 4)))
-moved = sched.flush()
+kv_spec = sched.enqueue_read("kv_read", lines)
+wt_spec = sched.enqueue_read("weight_stream",
+                             jax.random.normal(jax.random.PRNGKey(1),
+                                               (16, 8, 4)))
+sched.issue()            # dispatch the burst (input half of the §III-C
+moved = sched.commit()   # double buffer); commit adopts the results
 assert np.allclose(moved["kv_read"], banked)
 print(f"burst scheduler: {sched.stats.streams_served} streams in "
-      f"{sched.stats.network_calls} network call(s)")
+      f"{sched.stats.network_calls} network call(s); extents "
+      f"kv_read=({kv_spec.offset},{kv_spec.words}) "
+      f"weight_stream=({wt_spec.offset},{wt_spec.words}); "
+      f"{sched.stats.words_moved} words moved, "
+      f"{sched.stats.words_padded} padded")
+
+# 6. The issue/commit pipeline: while one burst is in flight, the next
+#    step's streams stage — transfer overlaps consumer compute.
+sched.enqueue_read("kv_read", lines)
+sched.issue()
+next_step = jax.random.normal(jax.random.PRNGKey(2), (32, 8, 16))
+sched.enqueue_read("kv_read_next", next_step)     # stages behind the burst
+out = sched.commit()
+assert np.allclose(out["kv_read"], banked)
+assert np.allclose(sched.flush()["kv_read_next"],
+                   Fabric.make(8, "oracle").read(next_step))
+print(f"issue/commit pipeline: {sched.stats.flushes} flushes, "
+      f"{sched.stats.network_calls} network calls total")

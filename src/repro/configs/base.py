@@ -23,10 +23,20 @@ class PortSpec:
     transposition network; in the framework a port is a named consumer stream
     (KV read, KV write, weight stream, MoE dispatch) that the burst scheduler
     multiplexes through the shared read/write networks.
+
+    ``offset``/``words`` are the stream's extent on the packed burst's word
+    axis: the scheduler folds each stream's line groups into the word axis,
+    so a stream occupies ``words`` contiguous word lanes starting at
+    ``offset`` within its dtype group's ``[N, N, W_total]`` tile — the
+    framework form of the paper's per-port head/tail pointers.  The extents
+    are recorded at enqueue time regardless of ``FabricConfig.pack``; only
+    the ``"packed"`` layout slices by them.
     """
     name: str
     direction: str = "read"       # read | write
     lanes: int = 1                # W_acc multiplier for this stream
+    offset: int = 0               # word-axis offset within the packed burst
+    words: int = 0                # word-axis extent (0 = not yet scheduled)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +53,12 @@ class FabricConfig:
     buffered per port, §III-C); ``page_size`` the KV-cache page granularity
     in timesteps (one page = a burst of ``page_size`` lines); ``tile`` the
     exchange-network tile edge (0 = largest power-of-two that fits).
+
+    ``pack`` selects how the burst scheduler merges streams that share a
+    dtype: ``"packed"`` concatenates them along the word axis (zero padding
+    moves through the network — the §III-C deep-narrow banks with per-port
+    extents); ``"pad"`` pads every stream to the widest word and concatenates
+    along the line axis (kept for A/B benchmarking of the packing win).
     """
     n_ports: int = 8
     lane_width: int = 64
@@ -50,6 +66,7 @@ class FabricConfig:
     tile: int = 0
     burst_len: int = 32
     page_size: int = 64
+    pack: str = "packed"          # packed | pad
 
     @property
     def line_width(self) -> int:
@@ -59,6 +76,8 @@ class FabricConfig:
     def validate(self) -> "FabricConfig":
         if self.impl not in ("medusa", "crossbar", "oracle", "fused"):
             raise ValueError(f"unknown fabric impl {self.impl!r}")
+        if self.pack not in ("packed", "pad"):
+            raise ValueError(f"unknown burst packing {self.pack!r}")
         if self.n_ports < 1 or self.lane_width < 1:
             raise ValueError(f"bad fabric geometry N={self.n_ports} "
                              f"W_acc={self.lane_width}")

@@ -9,7 +9,12 @@ than per-consumer plumbing:
   primitive, all behind one implementation switch;
 * :class:`BurstScheduler` — multiplexes many logical streams (KV read, KV
   write, weight stream, MoE dispatch) through one network invocation per
-  step, the framework form of the paper's §III-C burst buffering;
+  step, the framework form of the paper's §III-C burst buffering.  Streams
+  pack along the word axis (each :class:`PortSpec` records its
+  ``(offset, words)`` extent — the per-port head/tail pointers — and the
+  network moves zero padding), and ``issue()``/``commit()`` split the
+  transfer into the §III-C input/output double buffer so it overlaps
+  consumer compute;
 * :class:`PagedKVCache` — the serving engine's KV storage as fixed-size
   pages over the fabric's banked layout, making slot refill a page remap.
 
@@ -34,6 +39,10 @@ write network          ``Fabric.write``: banked port buffers → line stream
 ``MaxBurstLen``        ``FabricConfig.burst_len``; cycle model in
 (§III-C)               ``repro.core.burst``; framework form in
                        ``BurstScheduler``
+head/tail pointers     ``PortSpec.offset``/``.words`` — each stream's word
+(§III-C)               extent in the packed burst (``FabricConfig.pack``)
+I/O double buffer      ``BurstScheduler.issue()`` / ``.commit()`` — a
+(§III-C)               one-deep pipeline; transfers overlap consumer compute
 §III-E latency         ``Fabric.latency_cycles`` (= N)
 =====================  =====================================================
 

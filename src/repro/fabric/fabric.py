@@ -60,6 +60,11 @@ class Fabric:
         return self.config.impl
 
     @property
+    def pack(self) -> str:
+        """Burst layout the scheduler uses on this fabric (packed | pad)."""
+        return self.config.pack
+
+    @property
     def latency_cycles(self) -> int:
         """Constant pipeline latency of the transposition unit (§III-E)."""
         return _t.transposition_latency_cycles(self.config.n_ports)

@@ -6,25 +6,48 @@ head/tail pointers, interference-free progress — modelled cycle-by-cycle in
 physical transposition network.  This module is the framework-level
 generalisation: consumers (KV read, KV write, weight stream, MoE expert
 dispatch) declare logical streams against a shared :class:`Fabric`; at each
-step the scheduler concatenates every queued stream into one burst, runs the
-read (resp. write) network **once**, and hands each consumer its slice back.
+step the scheduler merges every queued stream into one burst per direction
+and dtype, runs the read (resp. write) network once per burst, and hands
+each consumer its slice back.
 
-Value identity is exact: the read network transposes each N-line group
-independently, every stream contributes whole groups, and narrower streams
-are zero-padded on the word axis and sliced back after the transfer (the
-words of a line move independently through the network).  Streams of
-different dtypes cannot share a burst bit-identically, so the scheduler
-keeps one burst per dtype.
+Packing (``pack="packed"``, the default)
+----------------------------------------
+The words of a line move independently through the network (the transpose
+acts on the (line, word-index) axes; the word payload rides along), so a
+stream of ``k*N`` lines with ``W`` payload elements per word is *exactly*
+the same traffic as ``N`` lines with ``k*W`` payload elements — the line
+groups fold into the word axis.  Streams sharing a dtype therefore
+normalise to ``[N, N, k_i*W_i]`` tiles and concatenate along the word axis
+into one ``[N, N, W_total]`` burst: the network moves **zero padding**, and
+each stream's ``(offset, words)`` extent within the burst is recorded on
+its :class:`PortSpec` — the framework form of the paper's per-port
+head/tail pointers into the shared deep-narrow banks.  ``pack="pad"`` keeps
+the old pad-to-widest line-axis concatenation for A/B benchmarking.
+Streams of different dtypes cannot share a burst bit-identically, so the
+scheduler keeps one burst per dtype and direction either way.
 
-``stats`` counts network invocations vs streams served, which is exactly the
-contrast ``benchmarks/fabric_unified.py`` measures against per-consumer
+Issue/commit pipeline (§III-C double buffer)
+--------------------------------------------
+``flush()`` is split into :meth:`issue` (dispatch the queued bursts through
+the network) and :meth:`commit` (adopt the results).  The pipeline is one
+deep: after ``issue()`` the *next* burst's streams may be enqueued while
+the consumer computes on the previous ``commit()``'s results — under JAX's
+async dispatch (and inside ``jit``, under XLA's scheduler) the issued
+transfer genuinely overlaps consumer compute, which is the paper's
+input/output double buffer expressed once for every consumer.  ``flush()``
+remains as ``issue(); commit()`` for synchronous callers.
+
+``stats`` distinguishes ``flushes`` (issue/commit cycles) from
+``network_calls`` (one per direction and dtype present in a burst) and
+counts moved vs padded word-axis elements, which is exactly the contrast
+``benchmarks/fabric_unified.py`` measures against per-consumer
 :class:`Fabric` calls.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,8 +58,21 @@ from repro.fabric.fabric import Fabric
 
 @dataclasses.dataclass
 class SchedulerStats:
+    """Traffic accounting for a :class:`BurstScheduler`.
+
+    ``flushes`` counts issue/commit cycles (a ``flush()`` is one);
+    ``network_calls`` counts actual read-/write-network invocations — one
+    per (direction, dtype) group present in a burst, so a flush carrying
+    bf16 reads, f32 reads and bf16 writes is 1 flush but 3 network calls.
+    ``words_moved``/``words_padded`` count word-axis elements carried by the
+    network: moved is the payload consumers asked for, padded is the zero
+    fill the ``pack="pad"`` layout adds (always 0 under ``pack="packed"``).
+    """
     streams_served: int = 0
+    flushes: int = 0
     network_calls: int = 0
+    words_moved: int = 0
+    words_padded: int = 0
 
     @property
     def calls_saved(self) -> int:
@@ -48,38 +84,57 @@ class _Queued:
     spec: PortSpec
     payload: jax.Array            # lines [L, N, *rest] or banked [G, N, N, *rest]
     rest_shape: Tuple[int, ...]
-    words: int                    # prod(rest) — flattened word width
+    width: int                    # prod(rest) — payload elements per word
 
 
 class BurstScheduler:
-    """Batch queued read/write streams through one network call per flush."""
+    """Batch queued read/write streams through one network call per burst.
 
-    def __init__(self, fabric: Fabric):
+    ``pack`` defaults to the fabric's :attr:`FabricConfig.pack`; pass an
+    external :class:`SchedulerStats` to accumulate traffic accounting across
+    scheduler instances (e.g. one instance per traced decode step).
+    """
+
+    def __init__(self, fabric: Fabric, pack: Optional[str] = None,
+                 stats: Optional[SchedulerStats] = None):
         self.fabric = fabric
-        self.stats = SchedulerStats()
+        self.pack = pack or fabric.config.pack
+        if self.pack not in ("packed", "pad"):
+            raise ValueError(f"unknown burst packing {self.pack!r}")
+        self.stats = stats if stats is not None else SchedulerStats()
         self._reads: List[_Queued] = []
         self._writes: List[_Queued] = []
+        self._inflight: Optional[Dict[str, jax.Array]] = None
 
     # -- enqueue ---------------------------------------------------------------
     def _check_name(self, name: str) -> None:
-        # flush() keys results by stream name; a duplicate (even read vs
+        # commit() keys results by stream name; a duplicate (even read vs
         # write) would silently shadow one result
         if any(q.spec.name == name for q in self._reads + self._writes):
             raise ValueError(
-                f"stream {name!r} already queued for this flush; give each "
+                f"stream {name!r} already queued for this burst; give each "
                 f"logical port a distinct name (e.g. 'kv_read'/'kv_write')")
+
+    def _extent(self, queue: List[_Queued], dtype) -> int:
+        """Word-axis offset of the next stream within its dtype group."""
+        return sum(q.spec.words for q in queue
+                   if jnp.dtype(q.payload.dtype) == dtype)
 
     def enqueue_read(self, name: str, lines: jax.Array) -> PortSpec:
         """Queue a line stream ``[L, N, *rest]`` (L a multiple of N) for the
-        read network.  Returns the :class:`PortSpec` keying the result."""
+        read network.  Returns the :class:`PortSpec` keying the result, with
+        the stream's packed-burst ``(offset, words)`` extent filled in."""
         n = self.fabric.n_ports
         if lines.ndim < 2 or lines.shape[1] != n or lines.shape[0] % n:
             raise ValueError(
                 f"stream {name!r}: want [k*N, N, ...] lines for N={n}, "
                 f"got {lines.shape}")
         self._check_name(name)
-        spec = PortSpec(name=name, direction="read")
         rest = tuple(lines.shape[2:])
+        words = (lines.shape[0] // n) * _prod(rest)
+        spec = PortSpec(
+            name=name, direction="read", words=words,
+            offset=self._extent(self._reads, jnp.dtype(lines.dtype)))
         self._reads.append(_Queued(spec, lines, rest, _prod(rest)))
         return spec
 
@@ -91,24 +146,47 @@ class BurstScheduler:
                 f"stream {name!r}: want [G, N, N, ...] banked for N={n}, "
                 f"got {banked.shape}")
         self._check_name(name)
-        spec = PortSpec(name=name, direction="write")
         rest = tuple(banked.shape[3:])
+        words = banked.shape[0] * _prod(rest)
+        spec = PortSpec(
+            name=name, direction="write", words=words,
+            offset=self._extent(self._writes, jnp.dtype(banked.dtype)))
         self._writes.append(_Queued(spec, banked, rest, _prod(rest)))
         return spec
 
-    # -- one scheduler step ----------------------------------------------------
-    def flush(self) -> Dict[str, jax.Array]:
-        """Run the queued traffic: one read-network call and one write-network
-        call per dtype present, then scatter results back per stream name."""
+    # -- the issue/commit pipeline ---------------------------------------------
+    def issue(self) -> None:
+        """Dispatch the queued traffic through the networks (one read and one
+        write invocation per dtype present) and clear the queues, so the next
+        burst's streams can be enqueued while this one is in flight.  The
+        pipeline is one deep: a second :meth:`issue` before :meth:`commit`
+        is an ordering error."""
+        if self._inflight is not None:
+            raise RuntimeError(
+                "issue() with a burst already in flight; commit() the "
+                "previous burst first (the pipeline is one deep)")
         out: Dict[str, jax.Array] = {}
-        out.update(self._flush_direction(self._reads, read=True))
-        out.update(self._flush_direction(self._writes, read=False))
+        out.update(self._run_direction(self._reads, read=True))
+        out.update(self._run_direction(self._writes, read=False))
         self._reads, self._writes = [], []
+        self._inflight = out
+        self.stats.flushes += 1
+
+    def commit(self) -> Dict[str, jax.Array]:
+        """Adopt the in-flight burst's results, keyed by stream name."""
+        if self._inflight is None:
+            raise RuntimeError("commit() without a matching issue()")
+        out, self._inflight = self._inflight, None
         return out
 
-    def _flush_direction(self, queue: List[_Queued],
-                         read: bool) -> Dict[str, jax.Array]:
-        n = self.fabric.n_ports
+    def flush(self) -> Dict[str, jax.Array]:
+        """Synchronous form: ``issue()`` immediately followed by ``commit()``."""
+        self.issue()
+        return self.commit()
+
+    # -- burst construction ----------------------------------------------------
+    def _run_direction(self, queue: List[_Queued],
+                       read: bool) -> Dict[str, jax.Array]:
         out: Dict[str, jax.Array] = {}
         by_dtype: Dict[object, List[_Queued]] = {}
         for q in queue:
@@ -116,28 +194,97 @@ class BurstScheduler:
         for streams in by_dtype.values():
             self.stats.streams_served += len(streams)
             self.stats.network_calls += 1
-            w_max = max(q.words for q in streams)
-            flat = []
-            for q in streams:
-                lead = q.payload.shape[:2] if read else q.payload.shape[:3]
-                x = q.payload.reshape(lead + (q.words,))
-                if q.words < w_max:
-                    pad = [(0, 0)] * (x.ndim - 1) + [(0, w_max - q.words)]
-                    x = jnp.pad(x, pad)
-                flat.append(x)
-            burst = jnp.concatenate(flat, axis=0)
-            moved = self.fabric.read(burst) if read else self.fabric.write(burst)
-            # split back: stream i covers groups [off, off + L_i/N) (read) or
-            # lines [off, off + G_i*N) (write)
-            off = 0
-            for q in streams:
-                count = (q.payload.shape[0] // n if read
-                         else q.payload.shape[0] * n)
-                piece = moved[off:off + count]
-                off += count
-                piece = piece[..., :q.words]
-                out[q.spec.name] = piece.reshape(piece.shape[:-1] + q.rest_shape)
+            if self.pack == "packed":
+                out.update(self._run_packed(streams, read))
+            else:
+                out.update(self._run_padded(streams, read))
         return out
+
+    def _run_packed(self, streams: List[_Queued],
+                    read: bool) -> Dict[str, jax.Array]:
+        """Word-axis packing: fold each stream's group axis into the word
+        axis (``[k*N, N, W] ≡ [N, N, k*W]`` — words of a line move
+        independently), concatenate along words, run the network once on the
+        ``[N, N, W_total]`` tile, and slice each stream's extent back.
+
+        Payloads travel as machine words: the networks are pure word
+        movement (rolls/selects/gathers, no arithmetic), so each stream is
+        bitcast to the same-width unsigned integer for the transfer and back
+        on arrival — bit-exact by construction, and it keeps the burst off
+        XLA:CPU's slow-path bf16 concatenate/select kernels (the packing
+        wall-clock win depends on it)."""
+        n = self.fabric.n_ports
+        tiles = []
+        for q in streams:
+            groups = (q.payload.shape[0] // n if read else q.payload.shape[0])
+            flat = _int_view(q.payload.reshape((groups, n, n, q.width)))
+            tiles.append(flat.transpose(1, 2, 0, 3).reshape(n, n, -1))
+            self.stats.words_moved += groups * n * n * q.width
+        burst = tiles[0] if len(tiles) == 1 else jnp.concatenate(tiles, axis=-1)
+        moved = (self.fabric.read(burst)[0] if read
+                 else self.fabric.write(burst[None]))
+        out: Dict[str, jax.Array] = {}
+        for q in streams:
+            piece = moved[:, :, q.spec.offset:q.spec.offset + q.spec.words]
+            groups = q.spec.words // q.width
+            piece = piece.reshape(n, n, groups, q.width).transpose(2, 0, 1, 3)
+            piece = _un_view(piece, q.payload.dtype)
+            lead = (groups, n, n) if read else (groups * n, n)
+            out[q.spec.name] = piece.reshape(lead + q.rest_shape)
+        return out
+
+    def _run_padded(self, streams: List[_Queued],
+                    read: bool) -> Dict[str, jax.Array]:
+        """Pad-to-widest fallback (``pack="pad"``): streams concatenate along
+        the line axis after zero-padding narrower words to the widest — the
+        network moves the padding, which is what packed mode eliminates."""
+        n = self.fabric.n_ports
+        out: Dict[str, jax.Array] = {}
+        w_max = max(q.width for q in streams)
+        flat = []
+        for q in streams:
+            lead = q.payload.shape[:2] if read else q.payload.shape[:3]
+            x = q.payload.reshape(lead + (q.width,))
+            lines = q.payload.shape[0] * (1 if read else n)
+            self.stats.words_moved += lines * n * q.width
+            self.stats.words_padded += lines * n * (w_max - q.width)
+            if q.width < w_max:
+                pad = [(0, 0)] * (x.ndim - 1) + [(0, w_max - q.width)]
+                x = jnp.pad(x, pad)
+            flat.append(x)
+        burst = jnp.concatenate(flat, axis=0)
+        moved = self.fabric.read(burst) if read else self.fabric.write(burst)
+        # split back: stream i covers groups [off, off + L_i/N) (read) or
+        # lines [off, off + G_i*N) (write)
+        off = 0
+        for q in streams:
+            count = (q.payload.shape[0] // n if read
+                     else q.payload.shape[0] * n)
+            piece = moved[off:off + count]
+            off += count
+            piece = piece[..., :q.width]
+            out[q.spec.name] = piece.reshape(piece.shape[:-1] + q.rest_shape)
+        return out
+
+
+_WORD_VIEW = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}
+
+
+def _int_view(x: jax.Array) -> jax.Array:
+    """Same-width unsigned-integer view of a payload (identity for ints and
+    for widths without a same-size unsigned view)."""
+    if (jnp.issubdtype(x.dtype, jnp.integer)
+            or jnp.issubdtype(x.dtype, jnp.bool_)
+            or jnp.dtype(x.dtype).itemsize not in _WORD_VIEW):
+        return x
+    return jax.lax.bitcast_convert_type(
+        x, _WORD_VIEW[jnp.dtype(x.dtype).itemsize])
+
+
+def _un_view(x: jax.Array, dtype) -> jax.Array:
+    """Undo :func:`_int_view` on arrival."""
+    return x if x.dtype == jnp.dtype(dtype) else (
+        jax.lax.bitcast_convert_type(x, dtype))
 
 
 def _prod(shape: Tuple[int, ...]) -> int:

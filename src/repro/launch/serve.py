@@ -5,7 +5,9 @@ decode loop reads them through the model's fabric (``cfg.resolved_fabric``;
 override with ``--fabric-impl``).  ``--smoke`` runs the reduced config on
 CPU with real tokens; ``--engine`` serves through the continuous-batching
 :class:`repro.serving.ServingEngine` on the paged KV layout instead of the
-one-shot batch generate.
+one-shot batch generate — its decode step is burst-scheduled (one read +
+one write network invocation per dtype per step; ``--pack`` selects the
+burst layout, ``--serve-fsdp`` adds the weight stream to the read burst).
 """
 
 from __future__ import annotations
@@ -37,6 +39,11 @@ def main():
                     help="KV page size in timesteps (0 = fabric default)")
     ap.add_argument("--engine", action="store_true",
                     help="serve through the paged continuous-batching engine")
+    ap.add_argument("--pack", default=None, choices=[None, "packed", "pad"],
+                    help="burst layout for the scheduled decode step")
+    ap.add_argument("--serve-fsdp", action="store_true",
+                    help="stream ZeRO-1 sharded weights through the decode "
+                         "step's read burst (weight_stream ports)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -50,6 +57,12 @@ def main():
         cfg = dataclasses.replace(
             cfg, fabric=dataclasses.replace(cfg.resolved_fabric,
                                             page_size=args.page_size))
+    if args.pack:
+        cfg = dataclasses.replace(
+            cfg, fabric=dataclasses.replace(cfg.resolved_fabric,
+                                            pack=args.pack))
+    if args.serve_fsdp:
+        cfg = dataclasses.replace(cfg, serve_fsdp=True)
     fab = cfg.resolved_fabric
 
     data = SyntheticLM(cfg, batch=args.batch,
@@ -60,7 +73,7 @@ def main():
 
     t_max = args.prompt_len + args.gen_len + (cfg.n_patches or 0)
     print(f"arch={cfg.name} fabric=[impl={fab.impl} N={fab.n_ports} "
-          f"W_acc={fab.lane_width} page={fab.page_size}] "
+          f"W_acc={fab.lane_width} page={fab.page_size} pack={fab.pack}] "
           f"batch={args.batch} prompt={args.prompt_len} gen={args.gen_len}")
     t0 = time.time()
     if args.engine:
@@ -78,6 +91,13 @@ def main():
               f"({args.batch * args.gen_len / dt:.1f} tok/s); "
               f"admission moved {kv.tokens_moved} of "
               f"{kv.tokens_moved_dense} dense-splice timesteps")
+        fs = eng.fabric_stats
+        if fs.flushes:
+            print(f"fabric per step: {fs.network_calls} network calls for "
+                  f"{fs.streams_served} streams over {fs.flushes} bursts "
+                  f"({fs.words_moved} words moved, {fs.words_padded} padded)")
+        else:
+            print("fabric: decode step unscheduled (geometry fallback)")
         print("sample:", reqs[0].generated[:16])
     else:
         extra = {k: batch[k] for k in ("patch_embeds", "frames") if k in batch}

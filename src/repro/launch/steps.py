@@ -65,8 +65,9 @@ def resolve_fabric(cfg: ModelConfig, shape: ShapeConfig) -> FabricConfig:
     The decode cache is a [B, T, Hkv, D] line stream whose line width must
     be the fabric's W_line (one timestep across the port heads) — catching
     geometry errors here costs nothing; inside the jitted step they surface
-    as shape errors deep in the layer scan.  Pure validator: page clamping
-    to the cache depth happens where pages are allocated
+    as shape errors deep in the layer scan.  The burst packing mode
+    (``FabricConfig.pack``) is validated on the same path.  Pure validator:
+    page clamping to the cache depth happens where pages are allocated
     (``ServingEngine.__init__``).
     """
     del shape
@@ -305,14 +306,23 @@ def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh) -> BuiltStep:
 def build_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh) -> BuiltStep:
     """One decode step against a seq_len-deep KV cache (the serve_step that
     ``decode_*``/``long_*`` cells lower).  The cache is read through the
-    model's fabric (``resolve_fabric`` checks the geometry up front)."""
-    resolve_fabric(cfg, shape)
+    model's fabric (``resolve_fabric`` checks the geometry up front).
+
+    Under ``cfg.serve_fsdp`` the step runs burst-scheduled: the ZeRO-1
+    weight re-gather traffic enqueues as ``weight_stream`` ports in the same
+    read burst as the KV banking (one network invocation per dtype), so the
+    per-step weight movement batches with KV traffic instead of issuing its
+    own transfers."""
+    fab = resolve_fabric(cfg, shape)
     sharder = make_sharder(cfg, mesh)
     t_max = shape.seq_len
 
     def serve_step(params, caches, token, pos):
+        from repro.fabric import BurstScheduler, Fabric
         with use_sharder(sharder):
-            logits, new_caches = api.decode_fn(params, token, caches, pos, cfg)
+            sched = BurstScheduler(Fabric(fab)) if cfg.serve_fsdp else None
+            logits, new_caches = api.decode_fn(params, token, caches, pos,
+                                               cfg, sched=sched)
             return logits, new_caches
 
     params_shapes = _eval_params(cfg)

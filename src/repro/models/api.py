@@ -77,10 +77,13 @@ def init_cache(cfg: ModelConfig, batch: int, t_max: int):
     return lm.init_cache(cfg, batch, t_max)
 
 
-def decode_fn(params, token, caches, pos, cfg: ModelConfig):
+def decode_fn(params, token, caches, pos, cfg: ModelConfig, sched=None):
+    """One decode step.  ``sched`` (a :class:`repro.fabric.BurstScheduler`)
+    routes the step's KV banking — and ``serve_fsdp`` weight streaming —
+    through one read and one write network burst (decoder-only families)."""
     if cfg.family == "audio":
         return whisper.decode_step(params, token, caches, pos, cfg)
-    return lm.decode_step(params, token, caches, pos, cfg)
+    return lm.decode_step(params, token, caches, pos, cfg, sched=sched)
 
 
 def greedy_generate(params, prompt, cfg: ModelConfig, steps: int,

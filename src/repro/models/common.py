@@ -190,6 +190,39 @@ def sinusoidal_at(pos: jax.Array, d: int) -> jax.Array:
     return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
 
 
+def _qkv_project(p, x, cfg, *, positions, layer_kind: str,
+                 apply_rope: bool = True):
+    """Shared attention prologue: QKV projection, activation sharding, and
+    RoPE with the layer-kind theta selection.  Both decode paths (per-layer
+    and burst-scheduled) must stay bit-identical, so this lives in one
+    place.  Returns ``(q, k, v, window)``."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+    theta = cfg.rope_theta
+    if layer_kind == "A" and cfg.rope_theta_global:
+        theta = cfg.rope_theta_global
+    window = cfg.sliding_window if layer_kind == "L" else 0
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, s, hkv, hd)
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    k = shard(k, "batch", "seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "seq", "kv_heads", "head_dim")
+    if apply_rope:
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+    return q, k, v, window
+
+
+def _attn_output(p, out):
+    """Shared attention epilogue: output projection + sharding."""
+    b, s = out.shape[:2]
+    out = shard(out, "batch", "seq", "heads", "head_dim")
+    y = out.reshape(b, s, -1) @ p["wo"]
+    return shard(y, "batch", "seq", "d_model")
+
+
 def attention_apply(p, x, cfg, *, positions, layer_kind: str,
                     cache: Optional[dict] = None, kv_chunk: int = 0,
                     apply_rope: bool = True, causal: bool = True):
@@ -201,24 +234,9 @@ def attention_apply(p, x, cfg, *, positions, layer_kind: str,
     the cache is read through the Medusa KV layout engine (port-major
     head streams) — the paper's read network in production (DESIGN.md §3.1).
     """
-    b, s, _ = x.shape
-    hd = cfg.resolved_head_dim
-    h, hkv = cfg.n_heads, cfg.n_kv_heads
-    theta = cfg.rope_theta
-    if layer_kind == "A" and cfg.rope_theta_global:
-        theta = cfg.rope_theta_global
-    window = cfg.sliding_window if layer_kind == "L" else 0
-
-    q = (x @ p["wq"]).reshape(b, s, h, hd)
-    k = (x @ p["wk"]).reshape(b, s, hkv, hd)
-    v = (x @ p["wv"]).reshape(b, s, hkv, hd)
-    q = shard(q, "batch", "seq", "heads", "head_dim")
-    k = shard(k, "batch", "seq", "kv_heads", "head_dim")
-    v = shard(v, "batch", "seq", "kv_heads", "head_dim")
-    if apply_rope:
-        q = rope(q, positions, theta)
-        k = rope(k, positions, theta)
-
+    q, k, v, window = _qkv_project(p, x, cfg, positions=positions,
+                                   layer_kind=layer_kind,
+                                   apply_rope=apply_rope)
     if cache is None:
         out = attention(q, k, v, positions, positions, causal=causal,
                         window=window, kv_chunk=kv_chunk)
@@ -234,16 +252,90 @@ def attention_apply(p, x, cfg, *, positions, layer_kind: str,
                  else kv_pos[None, :] <= pos[:, None])
         out = cached_attention(q, ck, cv, pos, kv_pos, valid, window, cfg)
         new_kv = {"k": ck, "v": cv, "pos": pos}
-
-    out = shard(out, "batch", "seq", "heads", "head_dim")
-    y = out.reshape(b, s, h * hd) @ p["wo"]
-    return shard(y, "batch", "seq", "d_model"), new_kv
+    return _attn_output(p, out), new_kv
 
 
 def _kv_port_major(c: jax.Array, cfg) -> jax.Array:
     """[B, T, Hkv, D] line-major → [B, Hkv, T, D] port-major via the model's
     fabric (medusa kernel / crossbar / oracle — ``cfg.resolved_fabric``)."""
     return Fabric.for_model(cfg).kv_port_major(c)
+
+
+# ----------------------------------------------------------------------------
+# burst-scheduled KV banking (serving decode)
+# ----------------------------------------------------------------------------
+#
+# The scheduled decode step hoists every full-attention leaf's port-major
+# conversion out of the per-layer scan into ONE read-network burst (and the
+# conversion back into one write-network burst).  These helpers are the
+# relabels between a leaf's natural layout and the network's line/banked
+# forms; they assume the port-per-KV-head geometry (leaf Hkv axis == N).
+
+def kv_leaf_to_lines(leaf: jax.Array) -> jax.Array:
+    """Line-major KV leaf ``[..., T, Hkv, D]`` → line stream ``[L, N, D]``
+    (one timestep = one line across the head ports; leading axes flatten)."""
+    return leaf.reshape((-1,) + leaf.shape[-2:])
+
+
+def banked_to_port_major(banked: jax.Array, lead_shape) -> jax.Array:
+    """Read-network output ``[G, N, N, D]`` → port-major ``[..., Hkv, T, D]``
+    where ``lead_shape = leaf.shape[:-2]`` (e.g. ``(layers, B, T)``).  A pure
+    relabel of the banked buffer: each port reads its own deep-narrow bank."""
+    g, n, _, d = banked.shape
+    pm = banked.transpose(1, 0, 2, 3).reshape((n,) + tuple(lead_shape) + (d,))
+    return jnp.moveaxis(pm, 0, len(lead_shape) - 1)
+
+
+def port_major_to_banked(pm: jax.Array) -> jax.Array:
+    """Port-major ``[..., Hkv, T, D]`` → write-network input ``[G, N, N, D]``
+    (inverse of :func:`banked_to_port_major`)."""
+    x = jnp.moveaxis(pm, pm.ndim - 3, 0)          # [Hkv, ..., T, D]
+    n, d = x.shape[0], x.shape[-1]
+    x = x.reshape(n, -1, d)                       # [Hkv, L, D]
+    return x.reshape(n, x.shape[1] // n, n, d).transpose(1, 0, 2, 3)
+
+
+def _pm_cache_write(cache_pm: jax.Array, new: jax.Array,
+                    pos: jax.Array) -> jax.Array:
+    """Write the new token's K/V at ``pos`` directly in port-major space
+    (``cache_pm [B, Hkv, T, D]``, ``new [B, 1, Hkv, D]``; pos scalar or [B]).
+
+    Banking is a permutation, so updating after banking is bit-identical to
+    the unscheduled path's update-then-bank."""
+    new_pm = jnp.swapaxes(new, 1, 2)
+    if pos.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(cache_pm, new_pm, pos,
+                                                   axis=2)
+    return jax.vmap(lambda c, u, p:
+                    jax.lax.dynamic_update_slice_in_dim(c, u, p, axis=1)
+                    )(cache_pm, new_pm, pos)
+
+
+def attention_apply_banked(p, x, cfg, *, positions, layer_kind: str,
+                           cache: dict):
+    """Decode self-attention against a pre-banked port-major KV cache.
+
+    ``cache = {"k_pm"/"v_pm": [B, Hkv, T, D], "pos": scalar or [B]}`` — the
+    read network's output for this layer, hoisted into the step's single
+    burst by the scheduler.  The new token's K/V is written at ``pos`` in
+    port-major space and attention runs on the updated port-major cache —
+    bit-identical to :func:`attention_apply`'s cached branch, which updates
+    line-major and re-banks per layer.  Returns ``(out, {"k_pm", "v_pm"})``;
+    the step's write burst converts the updated caches back to line-major
+    once for every layer."""
+    q, k, v, window = _qkv_project(p, x, cfg, positions=positions,
+                                   layer_kind=layer_kind)
+    pos = cache["pos"]
+    ck_p = _pm_cache_write(cache["k_pm"], k, pos)
+    cv_p = _pm_cache_write(cache["v_pm"], v, pos)
+    ck_p = shard(ck_p, "batch", "kv_heads", "kv_seq", "head_dim")
+    cv_p = shard(cv_p, "batch", "kv_heads", "kv_seq", "head_dim")
+    t = ck_p.shape[2]
+    kv_pos = jnp.arange(t)
+    valid = (kv_pos <= pos if pos.ndim == 0
+             else kv_pos[None, :] <= pos[:, None])
+    out = _decode_attention(q, ck_p, cv_p, pos, kv_pos, valid, window)
+    return _attn_output(p, out), {"k_pm": ck_p, "v_pm": cv_p}
 
 
 def _cache_write(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:

@@ -133,11 +133,20 @@ def _sliding_cache_update(cache_kv, k_new, pos, window):
 
 
 def _block_apply(t: str, bp: dict, x, cfg: ModelConfig, *, positions,
-                 cache=None, pos=None, kv_chunk=0):
+                 cache=None, pos=None, kv_chunk=0, pm_cache=None):
     h = cm.apply_norm(x, bp["norm1"], cfg.norm)
     new_cache = None
     if t in ("A", "L"):
-        if cache is not None:
+        if pm_cache is not None:
+            # burst-scheduled decode: this layer's cache arrived port-major
+            # from the step's shared read burst; attend/update in that form
+            # and let the step's write burst restore line-major afterwards.
+            qpos = pos[None] if pos.ndim == 0 else pos[:, None]
+            h, new_cache = cm.attention_apply_banked(
+                bp["attn"], h, cfg, positions=qpos, layer_kind=t,
+                cache={"k_pm": pm_cache["k_pm"], "v_pm": pm_cache["v_pm"],
+                       "pos": pos})
+        elif cache is not None:
             # local layers always use a ring (windowed) cache in decode —
             # bounded memory even at 500k context.
             acache = {"k": cache["k"], "v": cache["v"], "pos": pos,
@@ -214,8 +223,10 @@ def _ring_attention_per_row(q, ck, cv, slot_pos, valid, cfg):
 
 
 def _scan_blocks(params, x, cfg, *, positions, caches=None, pos=None,
-                 kv_chunk=0, remat=True):
+                 kv_chunk=0, remat=True, pm_caches=None):
     unit, reps, tail = pattern_unit(cfg)
+    pm_unit = pm_caches["unit"] if pm_caches is not None else [None] * len(unit)
+    pm_tail = pm_caches["tail"] if pm_caches is not None else [None] * len(tail)
 
     if reps > 0:
         def body(carry, xs):
@@ -227,11 +238,12 @@ def _scan_blocks(params, x, cfg, *, positions, caches=None, pos=None,
                     h, _ = _block_apply(t, bp, h, cfg, positions=positions,
                                         kv_chunk=kv_chunk)
             else:
-                unit_p, unit_c = xs
+                unit_p, unit_c, unit_pm = xs
                 new_cs = []
-                for t, bp, c in zip(unit, unit_p, unit_c):
+                for t, bp, c, pmc in zip(unit, unit_p, unit_c, unit_pm):
                     h, nc = _block_apply(t, bp, h, cfg, positions=positions,
-                                         cache=c, pos=pos, kv_chunk=kv_chunk)
+                                         cache=c, pos=pos, kv_chunk=kv_chunk,
+                                         pm_cache=pmc)
                     new_cs.append(nc)
             return h, new_cs
 
@@ -240,7 +252,8 @@ def _scan_blocks(params, x, cfg, *, positions, caches=None, pos=None,
                       if cfg.remat == "dots" else None)
             body = jax.checkpoint(body, policy=policy)
         xs = (tuple(params["unit"]) if caches is None
-              else (tuple(params["unit"]), tuple(caches["unit"])))
+              else (tuple(params["unit"]), tuple(caches["unit"]),
+                    tuple(pm_unit)))
         x, new_unit_caches = jax.lax.scan(body, x, xs)
     else:
         new_unit_caches = None
@@ -249,7 +262,8 @@ def _scan_blocks(params, x, cfg, *, positions, caches=None, pos=None,
     for i, t in enumerate(tail):
         c = caches["tail"][i] if caches is not None else None
         x, nc = _block_apply(t, params["tail"][i], x, cfg, positions=positions,
-                             cache=c, pos=pos, kv_chunk=kv_chunk)
+                             cache=c, pos=pos, kv_chunk=kv_chunk,
+                             pm_cache=pm_tail[i])
         new_tail.append(nc)
     new_caches = (None if caches is None
                   else {"unit": new_unit_caches, "tail": new_tail})
@@ -271,17 +285,151 @@ def forward(params, tokens, cfg: ModelConfig, *, patch_embeds=None,
     return cm.logits_apply(params["embed"], x, cfg)
 
 
-def decode_step(params, token, caches, pos, cfg: ModelConfig):
+def decode_step(params, token, caches, pos, cfg: ModelConfig, sched=None):
     """One serving decode step: ``token [B, 1]`` + caches at ``pos`` →
     (logits [B, 1, V], new caches).  KV caches are read through the Medusa
-    port-major layout engine (cfg.kv_layout)."""
+    port-major layout engine (cfg.kv_layout).
+
+    With a :class:`repro.fabric.BurstScheduler` (``sched``), every
+    full-attention leaf's port-major conversion is hoisted out of the layer
+    scan into one shared read burst at the top of the step, attention runs
+    (and the new token's K/V is written) in port-major space, and one write
+    burst restores line-major caches at the bottom — 1 read + 1 write
+    network invocation per dtype per step instead of 2 conversions per
+    layer, bit-identical because banking is a permutation that commutes
+    with the single-timestep update.  Falls back to the per-layer path when
+    the fabric is not on the port-per-KV-head geometry or a leaf's line
+    count does not divide N."""
     pos = jnp.asarray(pos, jnp.int32)
     positions = pos[None] if pos.ndim == 0 else pos[:, None]
+    plan = _burst_plan(cfg, caches) if sched is not None else None
+    if plan is not None:
+        return _decode_step_scheduled(params, token, caches, pos, positions,
+                                      cfg, sched, plan)
     x = cm.embed_apply(params["embed"], token)
     x, new_caches = _scan_blocks(params, x, cfg, positions=positions,
                                  caches=caches, pos=pos, remat=False)
     x = cm.apply_norm(x, params["final_norm"], cfg.norm)
     return cm.logits_apply(params["embed"], x, cfg), new_caches
+
+
+def _full_attn(t: str, cfg: ModelConfig) -> bool:
+    """Full-depth attention layers (ring/recurrent/SSM caches stay on their
+    own decode paths — the fabric's small "control" traffic)."""
+    return t in ("A", "L") and not (t == "L" and cfg.sliding_window)
+
+
+def _burst_plan(cfg: ModelConfig, caches):
+    """The cache entries a scheduled decode step routes through the shared
+    burst: every full-attention ``k``/``v`` leaf, provided the fabric is on
+    the port-per-KV-head geometry (leaf head axis == N) and each leaf's
+    flattened line count divides N.  Returns ``[(kind, index), ...]`` or
+    None to fall back to the per-layer path.  The ``fused`` fabric never
+    banks — its consumers contract against the line-major cache directly,
+    so scheduling would materialize exactly the copies it elides."""
+    fab = cfg.resolved_fabric
+    n = fab.n_ports
+    if fab.impl == "fused":
+        return None
+    if n != cfg.n_kv_heads or fab.lane_width != cfg.resolved_head_dim:
+        return None
+    unit, reps, tail = pattern_unit(cfg)
+    plan = []
+    for kind, types in (("unit", unit if reps > 0 else ""), ("tail", tail)):
+        for i, t in enumerate(types):
+            if not _full_attn(t, cfg):
+                continue
+            leaf = caches[kind][i]["k"]
+            lines = 1
+            for s in leaf.shape[:-2]:
+                lines *= s
+            if leaf.shape[-2] != n or lines % n:
+                return None
+            plan.append((kind, i))
+    return plan or None
+
+
+def _decode_step_scheduled(params, token, caches, pos, positions,
+                           cfg: ModelConfig, sched, plan):
+    """The burst-scheduled decode step (see :func:`decode_step`).
+
+    Burst 1 (read network): every planned KV leaf — and, under
+    ``cfg.serve_fsdp``, every streamable weight leaf (the ZeRO-1 weight
+    all-gather traffic) — moves through one read invocation per dtype.
+    Burst 2 (write network): the updated port-major caches return to
+    line-major.  The issue()/commit() split keeps the transfers overlappable
+    with consumer compute under JAX async dispatch / XLA scheduling."""
+    fab = cfg.resolved_fabric
+    n = fab.n_ports
+
+    # -- burst 1: weight stream + KV banking --------------------------------
+    streamed = None
+    if cfg.serve_fsdp:
+        streamed = _enqueue_weight_stream(sched, params, n)
+    for kind, i in plan:
+        for leaf_name in ("k", "v"):
+            sched.enqueue_read(f"{kind}{i}/{leaf_name}",
+                               cm.kv_leaf_to_lines(caches[kind][i][leaf_name]))
+    sched.issue()
+    moved = sched.commit()
+    if streamed is not None:
+        params = _rebuild_weight_stream(moved, *streamed)
+
+    pm = {"unit": [None] * len(caches["unit"]),
+          "tail": [None] * len(caches["tail"])}
+    for kind, i in plan:
+        lead = caches[kind][i]["k"].shape[:-2]
+        pm[kind][i] = {
+            leaf_name + "_pm": cm.banked_to_port_major(
+                moved[f"{kind}{i}/{leaf_name}"], lead)
+            for leaf_name in ("k", "v")}
+
+    x = cm.embed_apply(params["embed"], token)
+    x, new_caches = _scan_blocks(params, x, cfg, positions=positions,
+                                 caches=caches, pos=pos, remat=False,
+                                 pm_caches=pm)
+
+    # -- burst 2: updated port-major caches → line-major --------------------
+    for kind, i in plan:
+        for leaf_name in ("k", "v"):
+            sched.enqueue_write(
+                f"{kind}{i}/{leaf_name}",
+                cm.port_major_to_banked(new_caches[kind][i][leaf_name + "_pm"]))
+    sched.issue()
+    lines_back = sched.commit()
+    for kind, i in plan:
+        shape = caches[kind][i]["k"].shape
+        new_caches[kind][i] = {
+            leaf_name: lines_back[f"{kind}{i}/{leaf_name}"].reshape(shape)
+            for leaf_name in ("k", "v")}
+
+    x = cm.apply_norm(x, params["final_norm"], cfg.norm)
+    return cm.logits_apply(params["embed"], x, cfg), new_caches
+
+
+def _enqueue_weight_stream(sched, params, n: int):
+    """ZeRO-1 weight streaming (``serve_fsdp``): queue every weight leaf
+    whose size divides N² as a single-group line stream in the step's shared
+    read burst — the per-step weight all-gather traffic batches with the KV
+    reads through one network invocation per dtype.  Leaves that don't fit
+    the line geometry stay resident (control traffic)."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    streamed = []
+    for j, leaf in enumerate(leaves):
+        if leaf.size and leaf.size % (n * n) == 0:
+            sched.enqueue_read(f"weight_stream/{j}", leaf.reshape(n, n, -1))
+            streamed.append(j)
+    return leaves, treedef, streamed
+
+
+def _rebuild_weight_stream(moved, leaves, treedef, streamed):
+    """Drain the weight-stream ports: each port reads its own bank back, a
+    pure relabel of the banked buffer (the round trip is exact)."""
+    leaves = list(leaves)
+    for j in streamed:
+        banked = moved[f"weight_stream/{j}"]          # [1, N, N, W]
+        leaves[j] = jnp.swapaxes(banked[0], 0, 1).reshape(leaves[j].shape)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
 def prefill(params, tokens, cfg: ModelConfig, t_max: int, *,

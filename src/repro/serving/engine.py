@@ -12,6 +12,14 @@ depths coexist in one batched step — the production pattern behind
 vLLM-style serving, on top of the Medusa KV layout engine
 (``cfg.resolved_fabric``).
 
+The decode step is the burst scheduler's first production consumer: a
+:class:`repro.fabric.BurstScheduler` instance per step hoists every
+full-attention leaf's port-major conversion into one shared read burst,
+runs attention in port-major space, and restores line-major caches through
+one write burst — 1 read + 1 write network invocation per dtype per step
+(``fabric_stats``), with the ``serve_fsdp`` weight stream riding the same
+read burst.  Bit-identical to the per-layer path.
+
 Decoder-only families (dense/moe/ssm/hybrid/vlm); greedy sampling.
 """
 
@@ -25,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.fabric import PagedKVCache
+from repro.fabric import BurstScheduler, Fabric, PagedKVCache, SchedulerStats
 from repro.models import api
 from repro.models import lm
 
@@ -47,16 +55,32 @@ class ServingEngine:
         self.params = params
         self.max_slots = max_slots
         self.t_max = t_max
+        self.fabric = Fabric(cfg.resolved_fabric)
+        # cache depth rounds up so every full-attention leaf's line count
+        # divides N and the whole cache moves through the step's shared
+        # burst; positions beyond t_max are masked, so this is free capacity
+        n = self.fabric.n_ports
+        self.t_alloc = -(-t_max // n) * n
         self.kv = PagedKVCache(
-            api.init_cache(cfg, max_slots, t_max), max_slots, t_max,
-            page_size or min(cfg.resolved_fabric.page_size, t_max))
+            api.init_cache(cfg, max_slots, self.t_alloc), max_slots,
+            self.t_alloc,
+            page_size or min(cfg.resolved_fabric.page_size, self.t_alloc))
         self.pos = np.zeros((max_slots,), np.int32)      # next write position
         self.active: List[Optional[Request]] = [None] * max_slots
         self.tokens = np.zeros((max_slots, 1), np.int32)
         self.queue: List[Request] = []
 
-        self._decode = jax.jit(
-            lambda p, tok, caches, pos: api.decode_fn(p, tok, caches, pos, cfg))
+        # one scheduler instance per decode step: per-step KV banking (and
+        # the serve_fsdp weight stream) runs as one read + one write network
+        # burst per dtype.  ``fabric_stats`` accumulates at trace time, so
+        # after the first step it reads as the per-step traffic census.
+        self.fabric_stats = SchedulerStats()
+
+        def _step(p, tok, caches, pos):
+            sched = BurstScheduler(self.fabric, stats=self.fabric_stats)
+            return api.decode_fn(p, tok, caches, pos, cfg, sched=sched)
+
+        self._decode = jax.jit(_step)
 
     @property
     def caches(self):
@@ -74,7 +98,7 @@ class ServingEngine:
             req = self.queue.pop(0)
             prompt = jnp.asarray(req.prompt)[None, :]
             logits, req_cache = api.prefill_fn(
-                self.params, {"tokens": prompt}, self.cfg, self.t_max)
+                self.params, {"tokens": prompt}, self.cfg, self.t_alloc)
             # page remap: only the pages the prompt occupies move
             self.kv.refill(slot, req_cache, len(req.prompt))
             self.active[slot] = req

@@ -28,3 +28,15 @@ def test_serve_cli(tmp_path):
          "--smoke", "--batch", "2", "--prompt-len", "16", "--gen-len", "8"],
         env=ENV, capture_output=True, text=True, timeout=560, cwd=ROOT)
     assert "tok/s" in r.stdout, (r.stdout[-1200:], r.stderr[-800:])
+
+
+@pytest.mark.slow
+def test_serve_cli_engine_burst_scheduled(tmp_path):
+    """Engine path with the packed burst-scheduled decode + weight stream."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "gemma3-4b",
+         "--smoke", "--batch", "2", "--prompt-len", "12", "--gen-len", "6",
+         "--engine", "--pack", "packed", "--serve-fsdp"],
+        env=ENV, capture_output=True, text=True, timeout=560, cwd=ROOT)
+    assert "tok/s" in r.stdout, (r.stdout[-1200:], r.stderr[-800:])
+    assert "network calls" in r.stdout, r.stdout[-1200:]

@@ -43,13 +43,15 @@ def test_swap_minor_parity(impl, r, c):
 # consumer 2: burst-scheduled multi-stream round-trip
 # ---------------------------------------------------------------------------
 
+@pytest.mark.parametrize("pack", ("packed", "pad"))
 @pytest.mark.parametrize("impl", IMPLS)
-def test_burst_scheduler_multi_stream_roundtrip(impl):
+def test_burst_scheduler_multi_stream_roundtrip(impl, pack):
     """KV read + weight stream + MoE dispatch + batch staging share one
     network invocation, and each comes back bit-identical to its own
-    per-stream transfer; the write network inverts."""
+    per-stream transfer, under both burst layouts; the write network
+    inverts."""
     n = 4
-    fab = Fabric.make(n, impl)
+    fab = Fabric.make(n, impl, pack=pack)
     sched = BurstScheduler(fab)
     streams = {
         "kv_read": jax.random.normal(KEY, (8 * n, n, 16)),
@@ -100,6 +102,118 @@ def test_burst_scheduler_rejects_duplicate_stream_names():
         sched.enqueue_write("kv", jnp.zeros((1, 4, 4)))
     sched.flush()
     sched.enqueue_read("kv", jnp.zeros((4, 4)))            # fresh flush: ok
+
+
+def test_burst_scheduler_empty_flush():
+    """A flush with nothing queued is a no-op burst, not an error."""
+    sched = BurstScheduler(Fabric.make(4, "medusa"))
+    assert sched.flush() == {}
+    assert sched.stats.flushes == 1
+    assert sched.stats.network_calls == 0
+    assert sched.stats.streams_served == 0
+
+
+def test_burst_scheduler_issue_commit_ordering():
+    """The pipeline is one deep: commit() needs a matching issue(), a second
+    issue() needs the first burst committed — but the *next* burst's streams
+    may stage while one is in flight (the §III-C double buffer)."""
+    sched = BurstScheduler(Fabric.make(4, "oracle"))
+    with pytest.raises(RuntimeError, match="without a matching issue"):
+        sched.commit()
+    x = jnp.arange(16, dtype=jnp.float32).reshape(4, 4)
+    sched.enqueue_read("a", x)
+    sched.issue()
+    sched.enqueue_read("b", 2 * x)     # stages behind the in-flight burst
+    with pytest.raises(RuntimeError, match="already in flight"):
+        sched.issue()
+    out = sched.commit()
+    assert set(out) == {"a"}
+    with pytest.raises(RuntimeError, match="without a matching issue"):
+        sched.commit()                 # committed burst is gone
+    out2 = sched.flush()               # the staged stream was not dropped
+    assert set(out2) == {"b"}
+    np.testing.assert_array_equal(np.asarray(out2["b"]),
+                                  np.asarray(read_network_oracle(2 * x, 4)))
+    assert sched.stats.flushes == 2 and sched.stats.network_calls == 2
+
+
+@pytest.mark.parametrize("pack", ("packed", "pad"))
+def test_burst_scheduler_mixed_dtype_splits_bursts(pack):
+    """Streams of different dtypes cannot share a burst bit-identically, so
+    the scheduler keeps one network call per dtype — and each stream still
+    returns bit-identical to its own transfer."""
+    n = 4
+    sched = BurstScheduler(Fabric.make(n, "medusa", pack=pack))
+    streams = {
+        "kv_bf16": jax.random.normal(KEY, (2 * n, n, 8)).astype(jnp.bfloat16),
+        "wt_bf16": jax.random.normal(jax.random.fold_in(KEY, 1),
+                                     (n, n, 3)).astype(jnp.bfloat16),
+        "stage_i32": jnp.arange(2 * n * n * 5, dtype=jnp.int32
+                                ).reshape(2 * n, n, 5),
+        "acc_f32": jax.random.normal(jax.random.fold_in(KEY, 2), (n, n)),
+    }
+    for name, x in streams.items():
+        sched.enqueue_read(name, x)
+    out = sched.flush()
+    assert sched.stats.flushes == 1
+    assert sched.stats.network_calls == 3          # bf16 / int32 / f32
+    assert sched.stats.streams_served == 4
+    for name, x in streams.items():
+        assert out[name].dtype == x.dtype
+        np.testing.assert_array_equal(
+            np.asarray(out[name], np.float32),
+            np.asarray(read_network_oracle(x, n), np.float32))
+
+
+def test_port_spec_records_packed_extents():
+    """Each stream's PortSpec carries its (offset, words) extent on the
+    packed burst's word axis — cumulative per direction and dtype, in
+    enqueue order (the per-port head/tail pointers)."""
+    n = 4
+    sched = BurstScheduler(Fabric.make(n, "oracle"))
+    a = sched.enqueue_read("a", jnp.zeros((2 * n, n, 8)))    # 2 groups x 8
+    b = sched.enqueue_read("b", jnp.zeros((n, n, 3)))        # 1 group x 3
+    c = sched.enqueue_read("c", jnp.zeros((n, n)))           # 1 group x 1
+    w = sched.enqueue_write("w", jnp.zeros((2, n, n, 5)))    # separate axis
+    assert (a.offset, a.words) == (0, 16)
+    assert (b.offset, b.words) == (16, 3)
+    assert (c.offset, c.words) == (19, 1)
+    assert (w.offset, w.words) == (0, 10)
+    assert a.direction == "read" and w.direction == "write"
+    sched.flush()
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_packed_pad_unscheduled_parity(impl):
+    """The acceptance sweep: packed vs pad vs unscheduled (per-stream
+    ``Fabric.read``) are bit-identical on the mixed-width workload, and the
+    packed layout moves zero padding while pad moves the fill."""
+    n = 4
+    fab = Fabric.make(n, impl)
+    streams = {
+        "kv": jax.random.normal(KEY, (4 * n, n, 16)).astype(jnp.bfloat16),
+        "wt": jax.random.normal(jax.random.fold_in(KEY, 1),
+                                (2 * n, n, 4)).astype(jnp.bfloat16),
+        "st": jax.random.normal(jax.random.fold_in(KEY, 2),
+                                (n, n)).astype(jnp.bfloat16),
+    }
+    unscheduled = {name: fab.read(x) for name, x in streams.items()}
+    outs = {}
+    for pack in ("packed", "pad"):
+        sched = BurstScheduler(fab, pack=pack)
+        for name, x in streams.items():
+            sched.enqueue_read(name, x)
+        outs[pack] = sched.flush()
+        assert sched.stats.network_calls == 1
+        assert sched.stats.words_moved == sum(
+            int(np.prod(x.shape)) for x in streams.values())
+        # pad-to-widest fill: wt pads 12 of 16 words over 2n lines, st 15
+        assert sched.stats.words_padded == (0 if pack == "packed" else
+                                            2 * n * n * 12 + n * n * 15)
+        for name in streams:
+            np.testing.assert_array_equal(
+                np.asarray(outs[pack][name], np.float32),
+                np.asarray(unscheduled[name], np.float32))
 
 
 # ---------------------------------------------------------------------------

@@ -4,8 +4,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_smoke
+from repro.fabric import BurstScheduler, Fabric, SchedulerStats
 from repro.kernels import ops
 from repro.models import api, lm
 from repro.serving import ServingEngine, Request
@@ -83,3 +85,102 @@ def test_engine_matches_sequential_generation():
     for r, ref in zip(reqs, refs):
         assert r.done
         assert r.generated == ref, (r.rid, r.generated, ref)
+
+
+# ---------------------------------------------------------------------------
+# burst-scheduled decode (the scheduler's first production consumer)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pack", ("packed", "pad"))
+@pytest.mark.parametrize("vector_pos", (False, True))
+def test_scheduled_decode_bit_identical(pack, vector_pos):
+    """decode_fn with a BurstScheduler (KV banking hoisted into one read +
+    one write burst, attention in port-major space) is bit-identical to the
+    per-layer path — logits and the returned line-major caches — for scalar
+    and per-slot positions, both burst layouts."""
+    ops.use_kernels(False)
+    cfg = _fp32(get_smoke("starcoder2-15b"))
+    params = api.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 9), 0, cfg.vocab_size)
+    _, caches = api.prefill_fn(params, {"tokens": toks[:, :8]}, cfg, 12)
+    pos = jnp.asarray([8, 8], jnp.int32) if vector_pos else jnp.int32(8)
+
+    ref_logits, ref_caches = api.decode_fn(params, toks[:, 8:9], caches,
+                                           pos, cfg)
+    fab = Fabric(dataclasses.replace(cfg.resolved_fabric, pack=pack))
+    stats = SchedulerStats()
+    sched = BurstScheduler(fab, stats=stats)
+    logits, new_caches = api.decode_fn(params, toks[:, 8:9], caches, pos,
+                                       cfg, sched=sched)
+    assert stats.flushes == 2                      # read burst + write burst
+    assert stats.network_calls == 2                # one per direction (f32)
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(ref_logits))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), ref_caches, new_caches)
+
+
+@pytest.mark.parametrize("why", ("geometry", "fused"))
+def test_scheduled_decode_falls_back(why):
+    """Decode must fall back to the per-layer path, silently and
+    value-identically, when the fabric is off the port-per-KV-head geometry
+    (can't bank the leaves) or is ``fused`` (banking would materialize
+    exactly the port-major copies the fused impl elides)."""
+    ops.use_kernels(False)
+    from repro.configs.base import FabricConfig
+    base = _fp32(get_smoke("starcoder2-15b"))
+    if why == "geometry":
+        cfg = dataclasses.replace(base, fabric=FabricConfig(
+            n_ports=base.n_kv_heads * base.resolved_head_dim // 8,
+            lane_width=8, impl="oracle"))
+    else:
+        cfg = dataclasses.replace(base, kv_layout="fused")
+    params = api.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (1, 6), 0, cfg.vocab_size)
+    _, caches = api.prefill_fn(params, {"tokens": toks[:, :5]}, cfg, 8)
+    stats = SchedulerStats()
+    sched = BurstScheduler(Fabric(cfg.resolved_fabric), stats=stats)
+    logits, _ = api.decode_fn(params, toks[:, 5:6], caches, jnp.int32(5),
+                              cfg, sched=sched)
+    assert stats.flushes == 0                      # scheduler never engaged
+    ref, _ = api.decode_fn(params, toks[:, 5:6], caches, jnp.int32(5), cfg)
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(ref))
+
+
+def test_engine_decode_traffic_census():
+    """The engine's traced decode step runs exactly 1 read + 1 write network
+    invocation per dtype per step, serving every full-attention leaf."""
+    ops.use_kernels(False)
+    cfg = _fp32(get_smoke("starcoder2-15b"))
+    params = api.init_params(cfg, KEY)
+    eng = ServingEngine(cfg, params, max_slots=2, t_max=16)
+    eng.submit(Request(0, np.asarray([3, 1, 4], np.int32), max_new_tokens=2))
+    eng.run_to_completion(max_steps=8)
+    assert eng.fabric_stats.flushes == 2           # per traced step
+    assert eng.fabric_stats.network_calls == 2     # 1 read + 1 write (f32)
+    assert eng.fabric_stats.words_padded == 0      # packed default
+    assert eng.fabric_stats.words_moved > 0
+
+
+def test_engine_serve_fsdp_streams_weights_bit_identically():
+    """serve_fsdp routes the per-step weight re-gather through the same read
+    burst as the KV banking (weight_stream ports) — same greedy tokens, same
+    network-call count, more streams served."""
+    ops.use_kernels(False)
+    cfg = _fp32(get_smoke("starcoder2-15b"))
+    params = api.init_params(cfg, KEY)
+    prompts = [np.asarray([5, 2, 7, 1], np.int32),
+               np.asarray([9, 9, 3], np.int32)]
+
+    def serve(c):
+        eng = ServingEngine(c, params, max_slots=2, t_max=16)
+        reqs = [Request(i, p, max_new_tokens=4) for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_to_completion(max_steps=16)
+        return [r.generated for r in reqs], eng.fabric_stats
+
+    gen, stats = serve(cfg)
+    gen_fsdp, stats_fsdp = serve(dataclasses.replace(cfg, serve_fsdp=True))
+    assert gen == gen_fsdp
+    assert stats_fsdp.network_calls == stats.network_calls == 2
+    assert stats_fsdp.streams_served > stats.streams_served
