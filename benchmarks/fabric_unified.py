@@ -1,33 +1,51 @@
 """Unified burst-scheduled fabric vs per-consumer interconnect calls.
 
-The refactor claim measured: before, every consumer (KV read, weight
-stream, MoE dispatch staging, host batch staging) ran its own
-``Interconnect`` call — one read-network lowering each.  After, the
-:class:`repro.fabric.BurstScheduler` merges all queued streams and invokes
-the shared network once per dtype.  Two burst layouts are A/B'd on the same
-4-stream mixed-width traffic:
+The perf claims measured, on the same 4-stream mixed-width traffic:
 
-* ``packed`` (default) — streams fold their line groups into the word axis
-  and concatenate along words: the network moves zero padding;
-* ``pad`` — pad-to-widest line-axis concatenation (PR 1's layout, kept as
-  the fallback that shows why packing matters: the padded words it moves
-  cost real wall-clock).
+* ``per_consumer`` — seed style, one read-network lowering per consumer;
+* ``unified_pad`` — PR 1's burst layout (pad-to-widest line-axis concat; the
+  network moves the padding);
+* ``unified_packed`` — word-axis packing at the default fold
+  (``word_fold="auto"``: on this all-bf16 traffic the burst folds into u32
+  machine-word lanes), measured on the UNROLLED network so the
+  medusa-vs-crossbar headline compares network against network — the
+  ``..._kernel`` cells A/B the fused lowering on top (serving decode with
+  kernels enabled, the production default, takes that path);
+* ``unified_packed_fold1`` / ``_fold2`` / ``_fold4`` — the explicit
+  machine-word lane folding axis (PR 3): adjacent narrow words fold into
+  u32/u64 machine words behind the packing bitcast, halving/quartering the
+  lane count every exchange-stage select touches (``_fold4`` needs x64 for
+  the u64 lane and only appears then);
+* ``unified_packed_kernel`` (medusa only) — the packed burst lowers through
+  ONE fused ``pallas_call`` per direction (``Fabric.read_burst`` /
+  ``write_burst`` with kernels enabled) instead of the unrolled per-stage
+  HLO chain; measured at fold=1 (the PR 2 configuration, so the cell
+  isolates the kernel effect on the op census) plus a ``_fold2_kernel``
+  combination cell.
 
-We lower all forms over the same traffic and compare total HLO ops, gather
-census, CPU wall time, and words moved vs padded, for the medusa and
-crossbar fabrics.  Semantics are asserted identical before measuring, and
-the unified forms run through the issue()/commit() pipeline.  Results also
-land in ``BENCH_fabric.json`` (dir from ``$BENCH_DIR``, default cwd) — the
-perf-trajectory artifact.
+We lower every form over the same traffic and compare total HLO ops, gather
+census, CPU wall time, and the scheduler word census (moved / padded /
+folded / fused-kernel bursts), for the medusa and crossbar fabrics.
+Semantics are asserted identical before measuring, and the unified forms run
+through the issue()/commit() pipeline.
+
+Results append to ``BENCH_fabric.json`` (dir from ``$BENCH_DIR``, default
+cwd) — an append-only perf trajectory: each run adds a record carrying its
+git SHA, date and axis settings, and prior records survive, so regressions
+across PRs stay visible.  A legacy single-run artifact is migrated into the
+first record.
 
     python -m benchmarks.fabric_unified [--pack {packed,pad,both}]
+                                        [--fold {1,2,4} ...]
 """
 
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
 import os
+import subprocess
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +53,8 @@ import numpy as np
 
 from repro.data.pipeline import batch_lines
 from repro.fabric import BurstScheduler, Fabric, SchedulerStats
+from repro.fabric.scheduler import machine_word_dtype
+from repro.kernels import ops as kops
 from benchmarks.common import emit, time_us, hlo_op_census
 
 N = 8            # ports
@@ -59,8 +79,8 @@ def _enqueue_all(sched, kv, wt, moe, stage):
     sched.enqueue_read("batch_stage", stage)
 
 
-def _fns(impl: str, pack: str):
-    fab = Fabric.make(N, impl, pack=pack)
+def _fns(impl: str, pack: str, fold=1):
+    fab = Fabric.make(N, impl, pack=pack, word_fold=fold)
 
     def per_consumer(kv, wt, moe, stage):
         # seed style: one network call per consumer
@@ -77,55 +97,148 @@ def _fns(impl: str, pack: str):
     return jax.jit(per_consumer), jax.jit(unified)
 
 
-def _word_census(impl: str, pack: str, args) -> SchedulerStats:
+def _word_census(impl: str, pack: str, fold, args) -> SchedulerStats:
     stats = SchedulerStats()
-    sched = BurstScheduler(Fabric.make(N, impl, pack=pack), stats=stats)
+    sched = BurstScheduler(Fabric.make(N, impl, pack=pack, word_fold=fold),
+                           stats=stats)
     _enqueue_all(sched, *args)
     sched.flush()
     return stats
 
 
-def run(packs=("packed", "pad")) -> list:
+def _git_sha() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            stderr=subprocess.DEVNULL).decode().strip()
+    except Exception:
+        return "unknown"
+
+
+def _append_run(path: str, run: dict) -> None:
+    """Append-only trajectory: keep every prior run record; migrate a legacy
+    single-run (flat dict) artifact into the first record."""
+    history = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                old = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            old = None
+        if isinstance(old, dict) and isinstance(old.get("runs"), list):
+            history = old["runs"]
+        elif isinstance(old, dict):           # legacy flat artifact (PR 2)
+            legacy = {"git_sha": "legacy", "date": None,
+                      "workload": old.pop("workload", None), "cells": old}
+            history = [legacy]
+        else:
+            # never overwrite a trajectory we can't extend — move the
+            # unreadable/unrecognized file aside so the history survives
+            aside = path + ".corrupt"
+            os.replace(path, aside)
+            print(f"# warning: {path} was not a recognized trajectory; "
+                  f"moved to {aside}")
+    history.append(run)
+    with open(path, "w") as f:
+        json.dump({"runs": history}, f, indent=2, sort_keys=True)
+
+
+def run(packs=("packed", "pad"), folds=(1, 2)) -> list:
+    # a fold cell must measure what its name says: drop factors whose
+    # machine word doesn't exist for this bf16 traffic (u64 needs x64 —
+    # the scheduler would silently degrade the group and mislabel the cell)
+    realizable = tuple(f for f in folds
+                       if f == 1 or machine_word_dtype(2 * f) is not None)
+    for f in folds:
+        if f not in realizable:
+            print(f"# skipping fold{f} cells: no {2 * f}-byte machine word "
+                  f"on this platform (enable x64)")
+    folds = realizable
     args = _traffic()
     rows = []
-    artifact = {"workload": {"n_ports": N, "streams": 4,
-                             "words": [D, 32, 16, 1], "dtype": "bfloat16"}}
-    for impl in ("medusa", "crossbar"):
-        variants = []
-        per, _ = _fns(impl, "packed")
-        variants.append(("per_consumer", per, None))
-        for pack in packs:
-            _, uni = _fns(impl, pack)
-            variants.append((f"unified_{pack}", uni, pack))
-        ref = variants[0][1](*args)
-        for name, fn, pack in variants:
-            for x, y in zip(ref, fn(*args)):
-                assert np.array_equal(np.asarray(x, np.float32),
-                                      np.asarray(y, np.float32))
-            census = hlo_op_census(fn, *args)
-            gathers = (census.get("gather", 0) + census.get("dynamic-slice", 0)
-                       + census.get("scatter", 0))
-            cell = {"us": time_us(fn, *args),
-                    "total_hlo_ops": sum(census.values()),
-                    "gather_ops": gathers}
-            if pack is not None:
-                stats = _word_census(impl, pack, args)
-                cell["network_calls"] = stats.network_calls
-                cell["words_moved"] = stats.words_moved
-                cell["words_padded"] = stats.words_padded
-            else:
-                cell["network_calls"] = 4
-                cell["words_moved"] = sum(
-                    int(np.prod(a.shape)) for a in args)
-                cell["words_padded"] = 0
-            artifact[f"{impl}/{name}"] = cell
-            for key, val in cell.items():
-                rows.append((f"fabric_unified/{impl}/{name}/{key}",
-                             val if key == "us" else None,
-                             "" if key == "us" else val))
+    cells = {}
+    kernels_before = kops.kernels_enabled()
+
+    def variants_for(impl):
+        out = [("per_consumer", None, 1, False)]
+        if "pad" in packs:
+            out.append(("unified_pad", "pad", 1, False))
+        if "packed" in packs:
+            # headline cell: the default fabric config (word_fold="auto")
+            out.append(("unified_packed", "packed", "auto", False))
+            for fold in folds:
+                out.append((f"unified_packed_fold{fold}", "packed", fold,
+                            False))
+            if impl == "medusa":       # crossbar bursts never kernelize
+                out.append(("unified_packed_kernel", "packed", 1, True))
+                if 2 in folds:
+                    out.append(("unified_packed_fold2_kernel", "packed", 2,
+                                True))
+        return out
+
+    try:
+        for impl in ("medusa", "crossbar"):
+            kops.use_kernels(False)
+            ref = _fns(impl, "packed")[0](*args)
+            for name, pack, fold, kern in variants_for(impl):
+                kops.use_kernels(kern)
+                per, uni = _fns(impl, pack or "packed", fold)
+                fn = per if pack is None else uni
+                for x, y in zip(ref, fn(*args)):
+                    assert np.array_equal(np.asarray(x, np.float32),
+                                          np.asarray(y, np.float32)), (impl,
+                                                                       name)
+                census = hlo_op_census(fn, *args)
+                gathers = (census.get("gather", 0)
+                           + census.get("dynamic-slice", 0)
+                           + census.get("scatter", 0))
+                cell = {"us": time_us(fn, *args, iters=50),
+                        "total_hlo_ops": sum(census.values()),
+                        "gather_ops": gathers}
+                if pack is not None:
+                    stats = _word_census(impl, pack, fold, args)
+                    cell["network_calls"] = stats.network_calls
+                    cell["words_moved"] = stats.words_moved
+                    cell["words_padded"] = stats.words_padded
+                    cell["words_folded"] = stats.words_folded
+                    cell["kernel_bursts"] = stats.kernel_bursts
+                else:
+                    cell["network_calls"] = 4
+                    cell["words_moved"] = sum(
+                        int(np.prod(a.shape)) for a in args)
+                    cell["words_padded"] = 0
+                    cell["words_folded"] = 0
+                    cell["kernel_bursts"] = 0
+                cells[f"{impl}/{name}"] = cell
+                for key, val in cell.items():
+                    rows.append((f"fabric_unified/{impl}/{name}/{key}",
+                                 val if key == "us" else None,
+                                 "" if key == "us" else val))
+    finally:
+        kops.use_kernels(kernels_before)
+
+    run_record = {
+        "git_sha": _git_sha(),
+        "date": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        "workload": {"n_ports": N, "streams": 4, "words": [D, 32, 16, 1],
+                     "dtype": "bfloat16"},
+        "axes": {"packs": list(packs), "folds": list(folds),
+                 "x64": bool(jax.config.read("jax_enable_x64"))},
+        "cells": cells,
+    }
     path = os.path.join(os.environ.get("BENCH_DIR", "."), "BENCH_fabric.json")
-    with open(path, "w") as f:
-        json.dump(artifact, f, indent=2, sort_keys=True)
+    _append_run(path, run_record)
+
+    m, c = cells.get("medusa/unified_packed"), cells.get(
+        "crossbar/unified_packed")
+    if m and c:
+        print(f"# medusa/crossbar unified_packed wall-clock: "
+              f"{m['us']:.0f}us / {c['us']:.0f}us = {m['us'] / c['us']:.2f}x")
+    mk = cells.get("medusa/unified_packed_kernel")
+    if m and mk:
+        print(f"# medusa fused-kernel burst HLO ops: "
+              f"{mk['total_hlo_ops']} (unrolled {m['total_hlo_ops']})")
     return rows
 
 
@@ -133,5 +246,11 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--pack", choices=["packed", "pad", "both"],
                     default="both", help="burst layout(s) to A/B")
+    ap.add_argument("--fold", type=int, nargs="*", default=None,
+                    choices=[1, 2, 4],
+                    help="word_fold factors to sweep (default: 1 2, plus 4 "
+                         "under x64)")
     a = ap.parse_args()
-    emit(run(("packed", "pad") if a.pack == "both" else (a.pack,)))
+    folds = tuple(a.fold) if a.fold else (
+        (1, 2, 4) if jax.config.read("jax_enable_x64") else (1, 2))
+    emit(run(("packed", "pad") if a.pack == "both" else (a.pack,), folds))

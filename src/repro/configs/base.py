@@ -59,6 +59,17 @@ class FabricConfig:
     moves through the network — the §III-C deep-narrow banks with per-port
     extents); ``"pad"`` pads every stream to the widest word and concatenates
     along the line axis (kept for A/B benchmarking of the packing win).
+
+    ``word_fold`` caps machine-word lane folding on packed bursts: adjacent
+    narrow words fold into wider machine words before the network runs
+    (bf16/u16 pairs into u32; quads into u64 under x64), halving/quartering
+    the lane count every exchange stage touches — exact unfold on arrival,
+    bit-parity guaranteed since the networks are pure word movement.
+    ``"auto"`` (default) folds as wide as the dtype, stream geometry and
+    enabled machine words allow; ``1`` disables; ``2``/``4`` cap the factor.
+    Streams whose word counts don't divide the factor fall back gracefully
+    (the whole dtype group folds at the largest factor every member
+    supports).  Only the ``"packed"`` layout folds.
     """
     n_ports: int = 8
     lane_width: int = 64
@@ -67,6 +78,7 @@ class FabricConfig:
     burst_len: int = 32
     page_size: int = 64
     pack: str = "packed"          # packed | pad
+    word_fold: "str | int" = "auto"   # auto | 1 | 2 | 4
 
     @property
     def line_width(self) -> int:
@@ -78,6 +90,9 @@ class FabricConfig:
             raise ValueError(f"unknown fabric impl {self.impl!r}")
         if self.pack not in ("packed", "pad"):
             raise ValueError(f"unknown burst packing {self.pack!r}")
+        if self.word_fold not in ("auto", 1, 2, 4):
+            raise ValueError(f"word_fold must be 'auto', 1, 2 or 4, "
+                             f"got {self.word_fold!r}")
         if self.n_ports < 1 or self.lane_width < 1:
             raise ValueError(f"bad fabric geometry N={self.n_ports} "
                              f"W_acc={self.lane_width}")

@@ -89,6 +89,47 @@ class Fabric:
             return _b.write_network_crossbar(banked, n)
         return _t.write_network_oracle(banked, n)
 
+    # -- first-class bursts (the scheduler's hot path) -------------------------
+    @property
+    def burst_kernelized(self) -> bool:
+        """Whether :meth:`read_burst`/:meth:`write_burst` lower through the
+        fused Pallas kernel (medusa impl, kernels enabled, power-of-two N)."""
+        n = self.config.n_ports
+        return (self.impl == "medusa" and kops.kernels_enabled()
+                and n >= 2 and n & (n - 1) == 0)
+
+    def burst_kernelized_for(self, dtype) -> bool:
+        """:attr:`burst_kernelized`, per payload dtype: complex payloads
+        stay on the unrolled path (Pallas interpret on this jax cannot
+        stage complex buffers)."""
+        return (self.burst_kernelized
+                and not jnp.issubdtype(jnp.dtype(dtype), jnp.complexfloating))
+
+    def read_burst(self, burst: jax.Array) -> jax.Array:
+        """One packed ``[N, N, W]`` read-burst tile (N lines of N machine
+        words, W payload lanes — every queued stream of a dtype, word-packed
+        by the scheduler) → banked ``[N, N, W]``.  On the medusa fabric with
+        kernels enabled this is ONE fused ``pallas_call`` (word-tiled grid);
+        otherwise the per-stage network of :meth:`read` on the single tile."""
+        self._check_burst(burst)
+        if self.burst_kernelized_for(burst.dtype):
+            return kops.burst_read(burst, self.config.n_ports)
+        return self.read(burst)[0]
+
+    def write_burst(self, banked: jax.Array) -> jax.Array:
+        """Write direction of :meth:`read_burst`: one banked ``[N, N, W]``
+        tile → the ``[N, N, W]`` line tile headed back to DRAM."""
+        self._check_burst(banked)
+        if self.burst_kernelized_for(banked.dtype):
+            return kops.burst_write(banked, self.config.n_ports)
+        return self.write(banked[None])
+
+    def _check_burst(self, tile: jax.Array) -> None:
+        n = self.config.n_ports
+        if tile.ndim != 3 or tile.shape[0] != n or tile.shape[1] != n:
+            raise ValueError(
+                f"burst tile must be [N, N, W] for N={n}, got {tile.shape}")
+
     # -- layout engine --------------------------------------------------------
     def swap_minor(self, x: jax.Array) -> jax.Array:
         """Transpose the two minor axes of ``x`` (rectangular OK) — e.g.

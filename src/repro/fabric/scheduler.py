@@ -26,6 +26,30 @@ the old pad-to-widest line-axis concatenation for A/B benchmarking.
 Streams of different dtypes cannot share a burst bit-identically, so the
 scheduler keeps one burst per dtype and direction either way.
 
+Machine-word lane folding (``word_fold``)
+-----------------------------------------
+Payloads travel as machine words (same-width unsigned-integer views), and on
+packed bursts adjacent narrow words additionally *fold* into wider machine
+words before the network runs: bf16/u16 pairs ride u32 lanes, and under x64
+pairs/quads ride u64 — halving/quartering the lane count every exchange
+stage touches, for the same total bits.  This is the framework form of the
+paper's premise that the unit moves whole ``W_line``-bit lines per cycle
+(§III): the network never cares what a "word" is, so the scheduler picks the
+widest machine word the dtype and stream geometry allow.  The fold factor is
+per dtype group — the largest ``f ≤ word_fold`` (``"auto"`` = 4) every
+member stream supports, where a stream supports ``f`` when ``f`` divides its
+per-group word count (fold adjacent words of a line group, applied as part
+of the packing bitcast) or its group count (fold corresponding words of
+adjacent groups; the word-axis order inside a stream's extent is a scheduler
+internal).  Odd word counts therefore degrade the group to a narrower fold,
+never to an error, and the unfold on arrival is an exact bitcast — parity is
+guaranteed because the networks are pure word movement.  ``pack="pad"``
+never folds (it is the A/B baseline layout).  On XLA:CPU the fold is
+roughly wall-clock-neutral (the widening view costs what the lane savings
+recoup); it exists to model TPU lane packing, where a u32/u64 lane is the
+unit the VPU actually moves — and it halves/quarters the elements every
+select the exchange network emits touches.
+
 Issue/commit pipeline (§III-C double buffer)
 --------------------------------------------
 ``flush()`` is split into :meth:`issue` (dispatch the queued bursts through
@@ -67,12 +91,21 @@ class SchedulerStats:
     ``words_moved``/``words_padded`` count word-axis elements carried by the
     network: moved is the payload consumers asked for, padded is the zero
     fill the ``pack="pad"`` layout adds (always 0 under ``pack="packed"``).
+    ``words_folded`` counts the word-axis elements machine-word folding
+    removed from the network's lane view (they ride inside wider machine
+    words instead — a fold of 2 folds away half of a burst's elements), so
+    ``words_moved - words_folded`` is the post-fold lane traffic the network
+    actually touches.  ``kernel_bursts`` counts the network calls that
+    lowered through the fused single-kernel burst path
+    (:meth:`repro.fabric.Fabric.read_burst` with kernels enabled).
     """
     streams_served: int = 0
     flushes: int = 0
     network_calls: int = 0
     words_moved: int = 0
     words_padded: int = 0
+    words_folded: int = 0
+    kernel_bursts: int = 0
 
     @property
     def calls_saved(self) -> int:
@@ -85,22 +118,29 @@ class _Queued:
     payload: jax.Array            # lines [L, N, *rest] or banked [G, N, N, *rest]
     rest_shape: Tuple[int, ...]
     width: int                    # prod(rest) — payload elements per word
+    groups: int                   # line groups (L // N, resp. G)
 
 
 class BurstScheduler:
     """Batch queued read/write streams through one network call per burst.
 
-    ``pack`` defaults to the fabric's :attr:`FabricConfig.pack`; pass an
-    external :class:`SchedulerStats` to accumulate traffic accounting across
+    ``pack`` defaults to the fabric's :attr:`FabricConfig.pack` and
+    ``word_fold`` to its :attr:`FabricConfig.word_fold`; pass an external
+    :class:`SchedulerStats` to accumulate traffic accounting across
     scheduler instances (e.g. one instance per traced decode step).
     """
 
     def __init__(self, fabric: Fabric, pack: Optional[str] = None,
-                 stats: Optional[SchedulerStats] = None):
+                 word_fold=None, stats: Optional[SchedulerStats] = None):
         self.fabric = fabric
         self.pack = pack or fabric.config.pack
         if self.pack not in ("packed", "pad"):
             raise ValueError(f"unknown burst packing {self.pack!r}")
+        self.word_fold = (fabric.config.word_fold if word_fold is None
+                          else word_fold)
+        if self.word_fold not in ("auto", 1, 2, 4):
+            raise ValueError(f"word_fold must be 'auto', 1, 2 or 4, "
+                             f"got {self.word_fold!r}")
         self.stats = stats if stats is not None else SchedulerStats()
         self._reads: List[_Queued] = []
         self._writes: List[_Queued] = []
@@ -131,11 +171,12 @@ class BurstScheduler:
                 f"got {lines.shape}")
         self._check_name(name)
         rest = tuple(lines.shape[2:])
-        words = (lines.shape[0] // n) * _prod(rest)
+        groups = lines.shape[0] // n
+        words = groups * _prod(rest)
         spec = PortSpec(
             name=name, direction="read", words=words,
             offset=self._extent(self._reads, jnp.dtype(lines.dtype)))
-        self._reads.append(_Queued(spec, lines, rest, _prod(rest)))
+        self._reads.append(_Queued(spec, lines, rest, _prod(rest), groups))
         return spec
 
     def enqueue_write(self, name: str, banked: jax.Array) -> PortSpec:
@@ -151,7 +192,8 @@ class BurstScheduler:
         spec = PortSpec(
             name=name, direction="write", words=words,
             offset=self._extent(self._writes, jnp.dtype(banked.dtype)))
-        self._writes.append(_Queued(spec, banked, rest, _prod(rest)))
+        self._writes.append(_Queued(spec, banked, rest, _prod(rest),
+                                    banked.shape[0]))
         return spec
 
     # -- the issue/commit pipeline ---------------------------------------------
@@ -200,6 +242,24 @@ class BurstScheduler:
                 out.update(self._run_padded(streams, read))
         return out
 
+    def _group_fold(self, streams: List[_Queued]) -> int:
+        """The machine-word fold factor for one dtype group: the largest
+        ``f ≤ word_fold`` for which a ``f``-words-wide machine word exists
+        (u64 needs x64) and every member stream's geometry divides — ``f``
+        must divide the per-group word count (fold within the line group) or
+        the group count (fold across groups).  1 = no folding."""
+        cap = 4 if self.word_fold == "auto" else int(self.word_fold)
+        dt = jnp.dtype(streams[0].payload.dtype)
+        if (cap == 1 or jnp.issubdtype(dt, jnp.bool_)
+                or jnp.issubdtype(dt, jnp.complexfloating)):
+            return 1
+        for f in (4, 2):
+            if (f <= cap and machine_word_dtype(dt.itemsize * f) is not None
+                    and all(q.width % f == 0 or q.groups % f == 0
+                            for q in streams)):
+                return f
+        return 1
+
     def _run_packed(self, streams: List[_Queued],
                     read: bool) -> Dict[str, jax.Array]:
         """Word-axis packing: fold each stream's group axis into the word
@@ -208,29 +268,36 @@ class BurstScheduler:
         ``[N, N, W_total]`` tile, and slice each stream's extent back.
 
         Payloads travel as machine words: the networks are pure word
-        movement (rolls/selects/gathers, no arithmetic), so each stream is
-        bitcast to the same-width unsigned integer for the transfer and back
-        on arrival — bit-exact by construction, and it keeps the burst off
-        XLA:CPU's slow-path bf16 concatenate/select kernels (the packing
-        wall-clock win depends on it)."""
+        movement (block swaps/selects/gathers, no arithmetic), so each
+        stream is bitcast to the same-width unsigned integer for the
+        transfer and back on arrival — bit-exact by construction, and it
+        keeps the burst off XLA:CPU's slow-path bf16 concatenate/select
+        kernels.  Under ``word_fold`` the bitcast widens instead: adjacent
+        narrow words fold into one u32/u64 machine word — the same bits in
+        ``1/fold`` the lanes through every exchange stage — applied per
+        stream as part of the packing view (within the line group, or
+        across groups when the width is odd), with an exact unfolding
+        bitcast on arrival.  The burst runs through the fabric's
+        first-class burst path: one fused kernel launch per direction per
+        dtype when kernels are enabled."""
         n = self.fabric.n_ports
+        fold = self._group_fold(streams)
         tiles = []
         for q in streams:
-            groups = (q.payload.shape[0] // n if read else q.payload.shape[0])
-            flat = _int_view(q.payload.reshape((groups, n, n, q.width)))
-            tiles.append(flat.transpose(1, 2, 0, 3).reshape(n, n, -1))
-            self.stats.words_moved += groups * n * n * q.width
+            tiles.append(_pack_tile(q, n, fold))
+            elems = q.groups * n * n * q.width
+            self.stats.words_moved += elems
+            self.stats.words_folded += elems - elems // fold
         burst = tiles[0] if len(tiles) == 1 else jnp.concatenate(tiles, axis=-1)
-        moved = (self.fabric.read(burst)[0] if read
-                 else self.fabric.write(burst[None]))
+        moved = (self.fabric.read_burst(burst) if read
+                 else self.fabric.write_burst(burst))
+        if self.fabric.burst_kernelized_for(burst.dtype):
+            self.stats.kernel_bursts += 1
         out: Dict[str, jax.Array] = {}
         for q in streams:
-            piece = moved[:, :, q.spec.offset:q.spec.offset + q.spec.words]
-            groups = q.spec.words // q.width
-            piece = piece.reshape(n, n, groups, q.width).transpose(2, 0, 1, 3)
-            piece = _un_view(piece, q.payload.dtype)
-            lead = (groups, n, n) if read else (groups * n, n)
-            out[q.spec.name] = piece.reshape(lead + q.rest_shape)
+            piece = moved[:, :, q.spec.offset // fold:
+                          (q.spec.offset + q.spec.words) // fold]
+            out[q.spec.name] = _unpack_tile(piece, q, n, read, fold)
         return out
 
     def _run_padded(self, streams: List[_Queued],
@@ -267,24 +334,80 @@ class BurstScheduler:
         return out
 
 
-_WORD_VIEW = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}
+_WORD_VIEW = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}
+
+
+def machine_word_dtype(itemsize: int):
+    """The unsigned machine word of ``itemsize`` bytes, or None if the
+    platform doesn't move one (u64 exists only under x64 — without it jax
+    canonicalizes uint64 away, so float64 payloads and 8-byte folds skip
+    the integer-view fast path)."""
+    if itemsize == 8 and not jax.config.read("jax_enable_x64"):
+        return None
+    return _WORD_VIEW.get(itemsize)
 
 
 def _int_view(x: jax.Array) -> jax.Array:
-    """Same-width unsigned-integer view of a payload (identity for ints and
-    for widths without a same-size unsigned view)."""
+    """Same-width unsigned-integer view of a payload (identity for ints,
+    for widths without a same-size unsigned view, and for dtypes bitcast
+    rejects — bool and complex)."""
     if (jnp.issubdtype(x.dtype, jnp.integer)
             or jnp.issubdtype(x.dtype, jnp.bool_)
-            or jnp.dtype(x.dtype).itemsize not in _WORD_VIEW):
+            or jnp.issubdtype(x.dtype, jnp.complexfloating)):
         return x
-    return jax.lax.bitcast_convert_type(
-        x, _WORD_VIEW[jnp.dtype(x.dtype).itemsize])
+    wide = machine_word_dtype(jnp.dtype(x.dtype).itemsize)
+    return x if wide is None else jax.lax.bitcast_convert_type(x, wide)
 
 
 def _un_view(x: jax.Array, dtype) -> jax.Array:
     """Undo :func:`_int_view` on arrival."""
     return x if x.dtype == jnp.dtype(dtype) else (
         jax.lax.bitcast_convert_type(x, dtype))
+
+
+def _pack_tile(q: _Queued, n: int, fold: int) -> jax.Array:
+    """One stream → its ``[N, N, words/fold]`` extent of the packed burst.
+
+    ``fold == 1``: the line groups fold into the word axis behind a
+    same-width integer view.  ``fold > 1``: the bitcast widens instead —
+    adjacent words of a line group (when ``fold`` divides the stream's
+    width), or corresponding words of adjacent groups (word-major tile
+    order, when ``fold`` divides the group count)."""
+    g, w = q.groups, q.width
+    flat = q.payload.reshape(g, n, n, w)
+    if fold == 1:
+        return _int_view(flat).transpose(1, 2, 0, 3).reshape(n, n, -1)
+    wide = machine_word_dtype(jnp.dtype(q.payload.dtype).itemsize * fold)
+    if w % fold == 0:
+        folded = jax.lax.bitcast_convert_type(
+            flat.reshape(g, n, n, w // fold, fold), wide)
+        return folded.transpose(1, 2, 0, 3).reshape(n, n, -1)
+    grouped = flat.transpose(1, 2, 3, 0).reshape(n, n, w, g // fold, fold)
+    return jax.lax.bitcast_convert_type(grouped, wide).reshape(n, n, -1)
+
+
+def _unpack_tile(piece: jax.Array, q: _Queued, n: int, read: bool,
+                 fold: int) -> jax.Array:
+    """Inverse of :func:`_pack_tile`: the stream's slice of the moved burst
+    (``[N, N, words/fold]``) back to the consumer's layout — banked
+    ``[G, N, N, *rest]`` for reads, lines ``[G*N, N, *rest]`` for writes."""
+    g, w = q.groups, q.width
+    lead = (g, n, n) if read else (g * n, n)
+    if fold == 1:
+        out = piece.reshape(n, n, g, w).transpose(2, 0, 1, 3)
+        return _un_view(out, q.payload.dtype).reshape(lead + q.rest_shape)
+    if w % fold == 0:
+        out = piece.reshape(n, n, g, w // fold).transpose(2, 0, 1, 3)
+        return _unfold_view(out, q.payload.dtype).reshape(lead + q.rest_shape)
+    out = _unfold_view(piece.reshape(n, n, w, g // fold), q.payload.dtype)
+    return out.transpose(3, 0, 1, 2).reshape(lead + q.rest_shape)
+
+
+def _unfold_view(x: jax.Array, dtype) -> jax.Array:
+    """Bitcast a folded machine-word array back to ``dtype``, flattening the
+    ``fold``-sized axis the bitcast appends into the last dimension."""
+    y = jax.lax.bitcast_convert_type(x, dtype)
+    return y.reshape(y.shape[:-2] + (y.shape[-2] * y.shape[-1],))
 
 
 def _prod(shape: Tuple[int, ...]) -> int:

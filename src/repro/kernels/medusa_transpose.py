@@ -16,6 +16,14 @@ leading dims (sublanes).  Grid tiles are square ``T x T`` with ``T`` a power
 of two; block (i, j) of the input writes block (j, i) of the output — the tile
 *grid* transpose is free (BlockSpec index maps), the intra-tile movement is
 the exchange network.
+
+:func:`burst_network_tiles` is the burst-scheduler entry point: one packed
+``[N, N, W_total]`` burst tile (every queued stream of a dtype, word-packed)
+moves through a single ``pallas_call`` with a word-tiled grid — the whole
+§III-A transposition as one kernel launch per direction per dtype, instead of
+the unrolled per-stage HLO chain.  The square-tile network is an involution,
+so the same kernel serves both the read (lines → banked) and write (banked →
+lines) directions; only the surrounding group reshapes differ.
 """
 
 from __future__ import annotations
@@ -27,21 +35,31 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.transpose import _bit_flip_both, _swap_mask
+
+
+def _exchange_stage(tile: jax.Array, a0: int, a1: int, level: int) -> jax.Array:
+    """One exchange stage: swap bit ``level`` between the ``a0``/``a1``
+    indices.  The partner value sits at both bits flipped — a static bit-flip
+    block swap (:func:`repro.core.transpose._bit_flip_both`, the wiring of
+    one barrel-shifter layer) — picked by a 2-to-1 select on the stage's
+    static mux pattern.  The mask is built from an in-kernel iota (a Pallas
+    kernel body cannot capture host constants); it is xor-symmetric, so
+    axis order is free."""
+    n = tile.shape[a0]
+    flipped = _bit_flip_both(tile, a0, a1, level)
+    row = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    mshape = [1] * tile.ndim
+    mshape[min(a0, a1)], mshape[max(a0, a1)] = n, n
+    mask = ((((row ^ col) >> level) & 1) == 1).reshape(mshape)
+    return jnp.where(mask, flipped, tile)
+
 
 def _exchange_network(tile: jax.Array) -> jax.Array:
     """log2(T)-stage binary-exchange transpose of ``tile [T, T, W]``."""
-    t = tile.shape[0]
-    stages = int(math.log2(t))
-    row = jax.lax.broadcasted_iota(jnp.int32, tile.shape, 0)
-    col = jax.lax.broadcasted_iota(jnp.int32, tile.shape, 1)
-    for level in range(stages):
-        s = 1 << level
-        rbit = (row >> level) & 1
-        cbit = (col >> level) & 1
-        from_down = jnp.roll(jnp.roll(tile, s, axis=0), -s, axis=1)
-        from_up = jnp.roll(jnp.roll(tile, -s, axis=0), s, axis=1)
-        tile = jnp.where((rbit == 1) & (cbit == 0), from_down,
-                         jnp.where((rbit == 0) & (cbit == 1), from_up, tile))
+    for level in range(int(math.log2(tile.shape[0]))):
+        tile = _exchange_stage(tile, 0, 1, level)
     return tile
 
 
@@ -77,18 +95,8 @@ def medusa_transpose_tiles(x: jax.Array, tile: int = 8,
 
 def _exchange_network_nd(tile: jax.Array, a0: int, a1: int) -> jax.Array:
     """Exchange network over an arbitrary axis pair (payload elsewhere)."""
-    t = tile.shape[a0]
-    stages = int(math.log2(t))
-    row = jax.lax.broadcasted_iota(jnp.int32, tile.shape, a0)
-    col = jax.lax.broadcasted_iota(jnp.int32, tile.shape, a1)
-    for level in range(stages):
-        s = 1 << level
-        rbit = (row >> level) & 1
-        cbit = (col >> level) & 1
-        from_down = jnp.roll(jnp.roll(tile, s, axis=a0), -s, axis=a1)
-        from_up = jnp.roll(jnp.roll(tile, -s, axis=a0), s, axis=a1)
-        tile = jnp.where((rbit == 1) & (cbit == 0), from_down,
-                         jnp.where((rbit == 0) & (cbit == 1), from_up, tile))
+    for level in range(int(math.log2(tile.shape[a0]))):
+        tile = _exchange_stage(tile, a0, a1, level)
     return tile
 
 
@@ -118,3 +126,78 @@ def read_network_tiles(lines: jax.Array, n_ports: int,
         out_shape=jax.ShapeDtypeStruct((groups, n, n, w), lines.dtype),
         interpret=interpret,
     )(x)
+
+
+def _pick_word_tile(w: int, cap: int = 4096) -> int:
+    """Word-tile for a burst of ``w`` lanes: the whole burst when it fits,
+    else the largest divisor of ``w`` in (cap/2, cap] (one clean grid), else
+    the evenest split at the same grid depth — ``ceil(w / ceil(w/cap))``
+    pads at most ``grid-1`` lanes total instead of up to ``cap-1``."""
+    if w <= cap:
+        return w
+    for t in range(cap, cap // 2, -1):
+        if w % t == 0:
+            return t
+    grid = -(-w // cap)
+    return -(-w // grid)
+
+
+def _stage_masks(n: int):
+    """The exchange network's static mux patterns, one ``[N, N, 1]`` bool
+    mask per stage (:func:`repro.core.transpose._swap_mask`).  Passed to
+    the burst kernel as operands — SMEM-sized control state, the
+    compile-time wiring of the paper's muxes — because a Pallas body cannot
+    capture array constants and building them in-body from iotas costs
+    more than it says."""
+    return tuple(_swap_mask(3, n, 0, 1, level)
+                 for level in range(int(math.log2(n))))
+
+
+def _burst_kernel(*refs):
+    # One word tile per grid step: [N, N, tw] through the exchange network —
+    # on hardware the Pallas pipeline double-buffers consecutive word tiles
+    # through VMEM (the paper's §III-C prefetch) while the VPU exchanges the
+    # resident one.  refs = (x, mask_0 .. mask_{stages-1}, out).
+    x_ref, o_ref = refs[0], refs[-1]
+    tile = x_ref[...]
+    for level, m_ref in enumerate(refs[1:-1]):
+        tile = jnp.where(m_ref[...], _bit_flip_both(tile, 0, 1, level), tile)
+    o_ref[...] = tile
+
+
+@functools.partial(jax.jit, static_argnames=("n_ports", "word_tile",
+                                             "interpret"))
+def burst_network_tiles(tile: jax.Array, n_ports: int, word_tile: int = 0,
+                        interpret: bool = True) -> jax.Array:
+    """One packed burst ``[N, N, W]`` through the transposition unit as a
+    single fused kernel — the whole burst is one launch per direction per
+    dtype (vs the unrolled per-stage HLO chain of
+    :func:`repro.core.transpose.medusa_transpose`).
+
+    The square ``[N, N]`` exchange is an involution, so the same kernel is
+    the read network (``lines[p, y] → banked[y, p]``) and the write network
+    (banked → lines); callers do their own group reshapes.  The grid tiles
+    the word axis: ``word_tile`` lanes per step, default the whole burst
+    when it fits a VMEM block (W ≤ 4096), else the largest divisor of W
+    near 4096 (or 4096 with pad, sliced off after — VMEM tiling fill, not
+    network traffic).  ``interpret=True`` runs the same body on CPU."""
+    n = n_ports
+    if tile.ndim != 3 or tile.shape[0] != n or tile.shape[1] != n:
+        raise ValueError(f"bad burst tile {tile.shape} for N={n}")
+    w = tile.shape[2]
+    if w == 0:
+        return tile
+    tw = word_tile or _pick_word_tile(w)
+    pad = (-w) % tw
+    x = jnp.pad(tile, ((0, 0), (0, 0), (0, pad))) if pad else tile
+    masks = _stage_masks(n)
+    out = pl.pallas_call(
+        _burst_kernel,
+        grid=((w + pad) // tw,),
+        in_specs=[pl.BlockSpec((n, n, tw), lambda i: (0, 0, i))]
+                 + [pl.BlockSpec((n, n, 1), lambda i: (0, 0, 0))] * len(masks),
+        out_specs=pl.BlockSpec((n, n, tw), lambda i: (0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, n, w + pad), tile.dtype),
+        interpret=interpret,
+    )(x, *masks)
+    return out[:, :, :w] if pad else out

@@ -21,7 +21,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.medusa_transpose import (medusa_transpose_tiles,
+from repro.kernels.medusa_transpose import (burst_network_tiles,
+                                            medusa_transpose_tiles,
                                             read_network_tiles)
 from repro.kernels.rotator import barrel_rotate_groups
 from repro.kernels.stream_matmul import stream_matmul
@@ -75,6 +76,26 @@ def interconnect_read(lines: jax.Array, n_ports: int) -> jax.Array:
         from repro.core.transpose import read_network_oracle
         return read_network_oracle(lines, n_ports)
     return read_network_tiles(lines, n_ports)
+
+
+def burst_read(tile: jax.Array, n_ports: int) -> jax.Array:
+    """Packed read burst ``[N, N, W]`` (N lines of N words) → banked
+    ``[N, N, W]`` as ONE fused kernel launch (the burst scheduler's hot
+    path; see :func:`repro.kernels.medusa_transpose.burst_network_tiles`)."""
+    if not _USE_KERNELS:
+        from repro.core.transpose import read_network_oracle
+        return read_network_oracle(tile, n_ports)[0]
+    return burst_network_tiles(tile, n_ports)
+
+
+def burst_write(banked: jax.Array, n_ports: int) -> jax.Array:
+    """Packed write burst: banked ``[N, N, W]`` → line tile ``[N, N, W]``
+    as one fused kernel launch (the square exchange is an involution, so
+    this is the same network run in the write direction)."""
+    if not _USE_KERNELS:
+        from repro.core.transpose import write_network_oracle
+        return write_network_oracle(banked[None], n_ports)
+    return burst_network_tiles(banked, n_ports)
 
 
 def rotate_groups(x: jax.Array, amounts: jax.Array) -> jax.Array:

@@ -7,7 +7,9 @@ CPU with real tokens; ``--engine`` serves through the continuous-batching
 :class:`repro.serving.ServingEngine` on the paged KV layout instead of the
 one-shot batch generate — its decode step is burst-scheduled (one read +
 one write network invocation per dtype per step; ``--pack`` selects the
-burst layout, ``--serve-fsdp`` adds the weight stream to the read burst).
+burst layout, ``--word-fold`` the machine-word lane folding cap,
+``--serve-fsdp`` adds the weight stream to the read burst).  On the medusa
+fabric with kernels enabled each burst lowers as one fused Pallas launch.
 """
 
 from __future__ import annotations
@@ -41,6 +43,10 @@ def main():
                     help="serve through the paged continuous-batching engine")
     ap.add_argument("--pack", default=None, choices=[None, "packed", "pad"],
                     help="burst layout for the scheduled decode step")
+    ap.add_argument("--word-fold", default=None,
+                    choices=[None, "auto", "1", "2", "4"],
+                    help="machine-word lane folding cap for packed bursts "
+                         "(auto = widest the dtype/geometry/x64 allow)")
     ap.add_argument("--serve-fsdp", action="store_true",
                     help="stream ZeRO-1 sharded weights through the decode "
                          "step's read burst (weight_stream ports)")
@@ -61,6 +67,11 @@ def main():
         cfg = dataclasses.replace(
             cfg, fabric=dataclasses.replace(cfg.resolved_fabric,
                                             pack=args.pack))
+    if args.word_fold:
+        fold = "auto" if args.word_fold == "auto" else int(args.word_fold)
+        cfg = dataclasses.replace(
+            cfg, fabric=dataclasses.replace(cfg.resolved_fabric,
+                                            word_fold=fold))
     if args.serve_fsdp:
         cfg = dataclasses.replace(cfg, serve_fsdp=True)
     fab = cfg.resolved_fabric
@@ -73,7 +84,8 @@ def main():
 
     t_max = args.prompt_len + args.gen_len + (cfg.n_patches or 0)
     print(f"arch={cfg.name} fabric=[impl={fab.impl} N={fab.n_ports} "
-          f"W_acc={fab.lane_width} page={fab.page_size} pack={fab.pack}] "
+          f"W_acc={fab.lane_width} page={fab.page_size} pack={fab.pack} "
+          f"fold={fab.word_fold}] "
           f"batch={args.batch} prompt={args.prompt_len} gen={args.gen_len}")
     t0 = time.time()
     if args.engine:
@@ -95,7 +107,9 @@ def main():
         if fs.flushes:
             print(f"fabric per step: {fs.network_calls} network calls for "
                   f"{fs.streams_served} streams over {fs.flushes} bursts "
-                  f"({fs.words_moved} words moved, {fs.words_padded} padded)")
+                  f"({fs.words_moved} words moved, {fs.words_padded} padded, "
+                  f"{fs.words_folded} folded into machine words, "
+                  f"{fs.kernel_bursts} fused-kernel bursts)")
         else:
             print("fabric: decode step unscheduled (geometry fallback)")
         print("sample:", reqs[0].generated[:16])

@@ -18,7 +18,10 @@ full-attention leaf's port-major conversion into one shared read burst,
 runs attention in port-major space, and restores line-major caches through
 one write burst — 1 read + 1 write network invocation per dtype per step
 (``fabric_stats``), with the ``serve_fsdp`` weight stream riding the same
-read burst.  Bit-identical to the per-layer path.
+read burst.  Bit-identical to the per-layer path.  The bursts ride the
+fabric's machine-word lane folding (``FabricConfig.word_fold``) and, on the
+medusa fabric with kernels enabled, lower as one fused Pallas launch per
+direction per dtype (``fabric_stats.words_folded`` / ``.kernel_bursts``).
 
 Decoder-only families (dense/moe/ssm/hybrid/vlm); greedy sampling.
 """
