@@ -5,6 +5,10 @@ The perf claims measured, on the same 4-stream mixed-width traffic:
 * ``per_consumer`` — seed style, one read-network lowering per consumer;
 * ``unified_pad`` — PR 1's burst layout (pad-to-widest line-axis concat; the
   network moves the padding);
+* ``unified_pad_fold2`` / ``_fold4`` — the pad layout riding the same
+  u32/u64 machine-word lanes as the packed cells (the fold divides the
+  padded width), so pad-vs-packed at equal fold isolates the packing
+  effect from the lane width;
 * ``unified_packed`` — word-axis packing at the default fold
   (``word_fold="auto"``: on this all-bf16 traffic the burst folds into u32
   machine-word lanes), measured on the UNROLLED network so the
@@ -164,6 +168,12 @@ def run(packs=("packed", "pad"), folds=(1, 2)) -> list:
         out = [("per_consumer", None, 1, False)]
         if "pad" in packs:
             out.append(("unified_pad", "pad", 1, False))
+            # fold-aware pad: the baseline layout on the same u32/u64 lanes,
+            # isolating the packing effect from the lane width
+            for fold in folds:
+                if fold > 1:
+                    out.append((f"unified_pad_fold{fold}", "pad", fold,
+                                False))
         if "packed" in packs:
             # headline cell: the default fabric config (word_fold="auto")
             out.append(("unified_packed", "packed", "auto", False))

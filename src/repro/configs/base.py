@@ -60,16 +60,26 @@ class FabricConfig:
     extents); ``"pad"`` pads every stream to the widest word and concatenates
     along the line axis (kept for A/B benchmarking of the packing win).
 
-    ``word_fold`` caps machine-word lane folding on packed bursts: adjacent
-    narrow words fold into wider machine words before the network runs
-    (bf16/u16 pairs into u32; quads into u64 under x64), halving/quartering
-    the lane count every exchange stage touches — exact unfold on arrival,
-    bit-parity guaranteed since the networks are pure word movement.
-    ``"auto"`` (default) folds as wide as the dtype, stream geometry and
-    enabled machine words allow; ``1`` disables; ``2``/``4`` cap the factor.
+    ``word_fold`` caps machine-word lane folding on bursts: adjacent narrow
+    words fold into wider machine words before the network runs (bf16/u16
+    pairs into u32; quads into u64 under x64), halving/quartering the lane
+    count every exchange stage touches — exact unfold on arrival, bit-parity
+    guaranteed since the networks are pure word movement.  ``"auto"``
+    (default) folds as wide as the dtype, stream geometry and enabled
+    machine words allow; ``1`` disables; ``2``/``4`` cap the factor.
     Streams whose word counts don't divide the factor fall back gracefully
     (the whole dtype group folds at the largest factor every member
-    supports).  Only the ``"packed"`` layout folds.
+    supports).  Both layouts fold: ``"packed"`` per stream geometry,
+    ``"pad"`` on the padded word axis (so the pack A/B isolates the packing
+    effect from the lane width).
+
+    ``paged_pool`` selects the serving engine's KV storage: ``True`` (the
+    default) backs every full-attention cache leaf with one shared physical
+    page pool plus a per-slot logical→physical page table (gather-based
+    decode, free-list allocation, true reclamation — short and long
+    sequences share HBM); ``False`` keeps the dense per-slot reservation
+    (``[max_slots, t_max]`` regions, the A/B baseline and the bit-parity
+    reference).
     """
     n_ports: int = 8
     lane_width: int = 64
@@ -79,6 +89,7 @@ class FabricConfig:
     page_size: int = 64
     pack: str = "packed"          # packed | pad
     word_fold: "str | int" = "auto"   # auto | 1 | 2 | 4
+    paged_pool: bool = True       # serving engine: shared physical page pool
 
     @property
     def line_width(self) -> int:

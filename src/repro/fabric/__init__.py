@@ -16,7 +16,11 @@ than per-consumer plumbing:
   transfer into the §III-C input/output double buffer so it overlaps
   consumer compute;
 * :class:`PagedKVCache` — the serving engine's KV storage as fixed-size
-  pages over the fabric's banked layout, making slot refill a page remap.
+  pages over the fabric's banked layout: a shared physical page pool
+  (:class:`PagePool` — free-list allocation, per-slot logical→physical
+  table, true reclamation) with gather-based decode, admission installed
+  as ``prefill/*`` write-burst traffic, and the dense per-slot reservation
+  kept as the A/B baseline (``FabricConfig.paged_pool``).
 
 Paper-term ↔ API map
 --------------------
@@ -55,8 +59,8 @@ deprecated shim over :class:`Fabric`.
 
 from repro.configs.base import FabricConfig, PortSpec
 from repro.fabric.fabric import Fabric
-from repro.fabric.paged_kv import PagedKVCache, PageTable
+from repro.fabric.paged_kv import PagedKVCache, PagePool, PageTable
 from repro.fabric.scheduler import BurstScheduler, SchedulerStats
 
 __all__ = ["Fabric", "FabricConfig", "PortSpec", "BurstScheduler",
-           "SchedulerStats", "PagedKVCache", "PageTable"]
+           "SchedulerStats", "PagedKVCache", "PagePool", "PageTable"]

@@ -35,6 +35,17 @@ from repro.core import transpose as _t
 from repro.kernels import ops as kops
 
 
+def pm_to_banked(pm: jax.Array, n: int) -> jax.Array:
+    """Port-major streams ``[N, L, D]`` (one deep-narrow stream per port) →
+    the banked ``[G, N, N, D]`` buffer the write network consumes — the one
+    place the banked layout invariant lives (``write ∘ pm_to_banked`` is
+    the identity on the corresponding ``[L, N, D]`` line stream).  Consumers:
+    ``models.common.port_major_to_banked`` (scheduled decode) and
+    ``PagedKVCache`` (burst-installed prefill)."""
+    l, d = pm.shape[1], pm.shape[-1]
+    return pm.reshape(n, l // n, n, d).transpose(1, 0, 2, 3)
+
+
 @dataclasses.dataclass(frozen=True)
 class Fabric:
     """A W_line ↔ N x W_acc memory-movement fabric with selectable network."""
@@ -68,6 +79,15 @@ class Fabric:
     def latency_cycles(self) -> int:
         """Constant pipeline latency of the transposition unit (§III-E)."""
         return _t.transposition_latency_cycles(self.config.n_ports)
+
+    @property
+    def banks_kv(self) -> bool:
+        """Whether this fabric banks KV traffic through the read/write
+        networks at all — the ``fused`` impl contracts consumers directly
+        against line-major caches, so routing KV through the networks would
+        materialize exactly the copies it elides (burst-scheduled decode
+        and burst-installed prefill both gate on this)."""
+        return self.impl != "fused"
 
     # -- the two data-transfer networks (paper §III-A) ------------------------
     def read(self, lines: jax.Array) -> jax.Array:

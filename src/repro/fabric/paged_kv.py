@@ -1,38 +1,68 @@
-"""Paged KV-cache layout for the serving engine.
+"""Paged KV-cache storage for the serving engine.
 
 The engine's batched decode cache is the fabric's banked layout applied to
-time: slot ``s`` owns a deep-narrow region ``[t_max, Hkv, D]`` whose time
+time: one timestep is a DRAM line across the N = Hkv ports, and the time
 axis is divided into fixed-size **pages** of ``page_size`` timesteps — one
-page = a burst of ``page_size`` DRAM lines (a line is one timestep across
-the N = Hkv ports).  :class:`PagedKVCache` wraps the cache pytree with a
-page table so slot refill is a **page remap**: admission writes only the
-``ceil(prompt / page_size)`` pages the prompt occupies instead of splicing
-the full ``t_max`` region (the seed engine's splice-copy), and retirement
-just returns the slot's pages to the free accounting — the stale frames are
-masked by per-slot positions and overwritten on the next admission.
+page = a burst of ``page_size`` lines.  Two storage modes share this module:
 
-Only full-depth attention leaves (names ``k``/``v`` with a ``t_max`` time
-axis) are paged.  Ring (sliding-window) KV caches are written rolled by
-prefill, so their window is copied whole; recurrent/SSM state leaves are
-O(1) in time and also copied whole — both are the "control" traffic of the
-fabric, small next to the paged KV payload.
+**Shared physical page pool** (``pool_pages > 0``, the engine default —
+``FabricConfig.paged_pool``).  Every full-attention leaf is backed by one
+``[n_pages, page_size, Hkv, D]`` physical region; a per-slot
+logical→physical table (:class:`PagePool`, ``int32 [n_slots,
+pages_per_slot]``, ``-1`` = unmapped) indirects each slot's time axis into
+it.  Pages come from a free list at admission and decode growth and return
+to it at retirement, so short and long sequences share HBM — a 12-token
+prompt holds ``ceil(13/page_size)`` frames, not a ``t_max`` reservation —
+and ``occupancy`` measures real frames.  Decode gathers each slot's mapped
+pages through the page table (``models.lm`` — port-major, composed with the
+step's shared read burst), bit-identical to the dense layout because every
+valid position gathers exactly the frame the dense cache would hold.
 
-``tokens_moved`` vs ``tokens_moved_dense`` quantifies the win: data actually
-copied at admission vs what the dense splice would have copied.
+**Dense per-slot reservation** (``pool_pages == 0``).  The original layout:
+slot ``s`` owns ``[t_max, Hkv, D]`` and the page table only bounds the
+admission splice — kept as the A/B baseline and bit-parity reference.
+
+Admission rides the fabric: :meth:`PagedKVCache.admit_wave` stages each
+admitted prompt's page-aligned KV extents as ``prefill/*`` write streams on
+one :class:`repro.fabric.BurstScheduler` flush — the per-stream
+``(offset, words)`` extents are exactly the page extents — so a wave of
+admissions is **one write-network call per dtype** instead of per-layer
+splices (``prefill_bursts``).  Slots whose extents miss the network
+geometry (lines not a multiple of N, or a non-bankable fabric) fall back to
+the per-layer splice (``prefill_splices``); the write network is an exact
+round trip, so both installs are bit-identical.
+
+Only full-depth attention leaves (``k``/``v`` with a ``t_max`` time axis —
+the entries named by ``paged_entries``) are paged.  Ring (sliding-window)
+KV caches are written rolled by prefill, so their window is copied whole;
+recurrent/SSM state leaves are O(1) in time and also copied whole — both
+are the "control" traffic of the fabric, small next to the paged payload.
+
+``tokens_moved`` vs ``tokens_moved_dense`` quantifies the admission win:
+timesteps actually copied vs what the seed engine's dense splice would have
+copied — ``t_max`` for a slot's first occupant (the region's state is
+unknown, the seed splices all of it), but only ``max(span, prior
+occupant's extent)`` on reuse (a dense engine need only overwrite the
+prompt plus the stale frames the prior occupant actually dirtied; counting
+``t_max`` again overstated the baseline).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+
+from repro.fabric.fabric import pm_to_banked
+from repro.fabric.scheduler import BurstScheduler, SchedulerStats
 
 
 @dataclasses.dataclass
 class PageTable:
-    """Per-slot page accounting: ``used[s]`` pages hold valid tokens."""
+    """Per-slot logical page accounting: ``used[s]`` pages hold valid tokens."""
 
     page_size: int
     pages_per_slot: int
@@ -62,15 +92,107 @@ class PageTable:
         return float(self.used.sum()) / total if total else 0.0
 
 
-class PagedKVCache:
-    """A batched decode-cache pytree with paged admission.
+class PagePool:
+    """Shared physical page frames + the per-slot logical→physical table.
 
-    ``caches`` is whatever ``api.init_cache(cfg, max_slots, t_max)`` built;
-    the wrapper never changes its structure (the jitted decode step consumes
-    ``.caches`` directly), only how data moves into it.
+    ``table[s, p]`` is the physical page backing slot ``s``'s logical page
+    ``p`` (``-1`` = unmapped).  Allocation pops the free list; retirement
+    pushes a slot's pages back (true reclamation).  ``pages_allocated`` /
+    ``pages_reclaimed`` are lifetime counters; ``pages_in_use`` and
+    ``occupancy`` describe the pool right now.
     """
 
-    def __init__(self, caches, max_slots: int, t_max: int, page_size: int):
+    def __init__(self, page_size: int, n_pages: int, pages_per_slot: int,
+                 n_slots: int):
+        if page_size < 1 or n_pages < 1:
+            raise ValueError(f"bad pool geometry page_size={page_size} "
+                             f"n_pages={n_pages}")
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.pages_per_slot = pages_per_slot
+        self.n_slots = n_slots
+        self.table = np.full((n_slots, pages_per_slot), -1, np.int32)
+        # stack: low page ids allocate first (deterministic, test-friendly)
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        self.pages_allocated = 0
+        self.pages_reclaimed = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.n_pages - len(self._free)
+
+    @property
+    def occupancy(self) -> float:
+        return self.pages_in_use / self.n_pages
+
+    def mapped(self, slot: int) -> int:
+        return int((self.table[slot] >= 0).sum())
+
+    def ensure(self, slot: int, n_logical: int) -> List[Tuple[int, int]]:
+        """Map logical pages ``[0, n_logical)`` of ``slot``; returns the
+        newly mapped ``(logical, physical)`` pairs.  Raises on exhaustion —
+        admission gates on :meth:`free_pages`, so this firing mid-decode
+        means the pool was sized below the workload's live footprint."""
+        n_logical = min(n_logical, self.pages_per_slot)
+        new = []
+        for p in range(n_logical):
+            if self.table[slot, p] < 0:
+                if not self._free:
+                    raise RuntimeError(
+                        f"page pool exhausted: slot {slot} needs logical page "
+                        f"{p} but all {self.n_pages} physical pages are "
+                        f"mapped — size the pool for the live footprint or "
+                        f"admit fewer sequences")
+                phys = self._free.pop()
+                self.table[slot, p] = phys
+                self.pages_allocated += 1
+                new.append((p, phys))
+        return new
+
+    def release(self, slot: int) -> int:
+        """Return every page mapped by ``slot`` to the free list."""
+        phys = self.table[slot][self.table[slot] >= 0]
+        self._free.extend(int(p) for p in phys[::-1])
+        self.table[slot] = -1
+        self.pages_reclaimed += len(phys)
+        return len(phys)
+
+    def check(self) -> None:
+        """Free-list conservation: every physical page is exactly once in
+        the free list or the table, and the lifetime counters balance."""
+        mapped = self.table[self.table >= 0].tolist()
+        if len(mapped) != len(set(mapped)):
+            raise ValueError(f"double-mapped physical pages: {sorted(mapped)}")
+        if sorted(mapped + self._free) != list(range(self.n_pages)):
+            raise ValueError(
+                f"page leak: mapped={sorted(mapped)} free={sorted(self._free)}"
+                f" != range({self.n_pages})")
+        if self.pages_allocated - self.pages_reclaimed != len(mapped):
+            raise ValueError(
+                f"counter drift: allocated={self.pages_allocated} "
+                f"reclaimed={self.pages_reclaimed} in_use={len(mapped)}")
+
+
+class PagedKVCache:
+    """A batched decode-cache pytree with paged admission and (optionally)
+    shared-pool physical storage.
+
+    ``caches`` is whatever ``api.init_cache(...)`` built — dense per-slot
+    regions, or pool-backed paged leaves when it was built with
+    ``pool_pages > 0`` (then pass the same ``pool_pages`` here, plus
+    ``paged_entries`` — the ``(kind, index)`` cache entries that are paged,
+    from :func:`repro.models.lm.paged_entries` — and the engine's
+    :class:`~repro.fabric.Fabric` so admission can ride the write network).
+    The wrapper never changes the pytree structure (the jitted decode step
+    consumes ``.caches`` directly), only how data moves into it.
+    """
+
+    def __init__(self, caches, max_slots: int, t_max: int, page_size: int,
+                 pool_pages: int = 0, paged_entries=(), fabric=None):
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         self.caches = caches
@@ -79,15 +201,108 @@ class PagedKVCache:
         self.table = PageTable(page_size=page_size,
                                pages_per_slot=-(-t_max // page_size),
                                n_slots=max_slots)
+        self.pool = (PagePool(page_size, pool_pages,
+                              self.table.pages_per_slot, max_slots)
+                     if pool_pages else None)
+        self.paged_entries = tuple(paged_entries)
+        self.fabric = fabric
         self.tokens_moved = 0
         self.tokens_moved_dense = 0
+        self.prefill_bursts = 0
+        self.prefill_splices = 0
+        # per-slot dirty extent (timesteps the slot's occupants ever wrote):
+        # -1 = never occupied.  This is the dense-splice counterfactual the
+        # seed engine would pay on refill (see module docstring).
+        self._dirty = np.full((max_slots,), -1, np.int64)
 
-    # -- admission: page remap instead of full splice -------------------------
+    # -- geometry / accounting -------------------------------------------------
+    @property
+    def paged(self) -> bool:
+        """True when KV storage is the shared physical page pool."""
+        return self.pool is not None
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of physical frames in use (pool) / logical pages used
+        against the dense reservation (dense mode)."""
+        return self.pool.occupancy if self.pool else self.table.occupancy
+
+    @property
+    def dense_reserved_pages(self) -> int:
+        """Pages the dense layout reserves regardless of occupancy."""
+        return self.max_slots * self.table.pages_per_slot
+
+    def page_table_device(self) -> jax.Array:
+        """The logical→physical table as a device operand for the gather-
+        based decode step (``int32 [max_slots, pages_per_slot]``)."""
+        if self.pool is None:
+            raise ValueError("dense mode has no physical page table")
+        return jnp.asarray(self.pool.table)
+
+    def _count_refill(self, slot: int, span: int) -> None:
+        self.tokens_moved += span
+        prior = int(self._dirty[slot])
+        # the seed engine's dense splice: the whole unknown region on first
+        # fill, prompt + the prior occupant's stale frames on reuse
+        self.tokens_moved_dense += self.t_max if prior < 0 else max(span, prior)
+        self._dirty[slot] = span
+
+    # -- admission -------------------------------------------------------------
     def refill(self, slot: int, req_cache, n_tokens: int) -> None:
-        """Install a single-request cache into ``slot``, touching only the
-        pages the ``n_tokens``-long prompt occupies."""
-        pages = self.table.map(slot, n_tokens)
-        span = min(pages * self.table.page_size, self.t_max)
+        """Install a single request (splice path); see :meth:`admit_wave`."""
+        self.admit_wave([(slot, req_cache, n_tokens)], burst=False)
+
+    def admit_wave(self, entries: Sequence[Tuple[int, object, int]],
+                   stats: Optional[SchedulerStats] = None,
+                   burst: Optional[bool] = None) -> None:
+        """Install a wave of admitted prompts: ``entries`` is
+        ``[(slot, req_cache, n_tokens), ...]``.
+
+        Pool mode stages every slot's page-aligned KV extents as
+        ``prefill/*`` write streams on one scheduler flush (1 write-network
+        call per dtype for the whole wave); slots off the network geometry —
+        and every slot when ``burst=False`` or the fabric can't bank —
+        install by per-layer splice instead, bit-identically.  Dense mode
+        always splices (it is the baseline layout)."""
+        plans = []
+        for slot, req_cache, n_tokens in entries:
+            inst_pages = self.table.pages_for(n_tokens)
+            span = min(inst_pages * self.table.page_size, self.t_max)
+            self._count_refill(slot, span)
+            self.table.map(slot, n_tokens)
+            if self.pool is not None:
+                self.pool.ensure(slot, self.table.pages_for(n_tokens + 1))
+            plans.append((slot, req_cache, span))
+        if self.pool is None:
+            for slot, req_cache, span in plans:
+                self._dense_splice(slot, req_cache, span)
+            return
+        self._pool_install(plans, stats=stats, burst=burst)
+
+    # -- decode-time bookkeeping ----------------------------------------------
+    def update(self, new_caches) -> None:
+        """Adopt the cache pytree returned by the jitted decode step."""
+        self.caches = new_caches
+
+    def extend(self, slot: int, pos: int) -> None:
+        self.table.extend(slot, pos)
+        self._dirty[slot] = max(int(self._dirty[slot]), pos)
+        if self.pool is not None:
+            self.pool.ensure(slot, self.table.pages_for(pos + 1))
+
+    def free(self, slot: int) -> None:
+        """Retire the slot: logical pages clear and — in pool mode — the
+        physical pages return to the free list (true reclamation).  The
+        dirty-extent counterfactual survives retirement: the dense engine's
+        stale frames don't vanish when a request finishes."""
+        self.table.free(slot)
+        if self.pool is not None:
+            self.pool.release(slot)
+
+    # -- install paths ---------------------------------------------------------
+    def _dense_splice(self, slot: int, req_cache, span: int) -> None:
+        """Dense-mode install: splice the request cache into the slot's
+        reserved region, paged leaves bounded to ``span`` timesteps."""
         t_max, max_slots = self.t_max, self.max_slots
 
         def one(path, batch_leaf, req_leaf):
@@ -107,19 +322,136 @@ class PagedKVCache:
 
         self.caches = jax.tree_util.tree_map_with_path(
             one, self.caches, req_cache)
-        self.tokens_moved += span
-        self.tokens_moved_dense += self.t_max
 
-    # -- decode-time bookkeeping ----------------------------------------------
-    def update(self, new_caches) -> None:
-        """Adopt the cache pytree returned by the jitted decode step."""
-        self.caches = new_caches
+    def _req_frames(self, req_cache, kind: str, i: int, name: str,
+                    span: int) -> jax.Array:
+        """A request's first ``span`` timesteps of one paged leaf, as
+        line-major frames ``[lead..., span, Hkv, D]``."""
+        leaf = req_cache[kind][i][name]        # [lead..., 1, t_alloc, Hkv, D]
+        return leaf[..., 0, :span, :, :]
 
-    def extend(self, slot: int, pos: int) -> None:
-        self.table.extend(slot, pos)
+    def _burst_eligible(self, req_cache, span: int) -> bool:
+        """Whether a slot's page extents fit the write network: a bankable
+        fabric on the port-per-KV-head geometry, and every paged leaf's
+        line count a multiple of N."""
+        if self.fabric is None or not self.fabric.banks_kv:
+            return False
+        n = self.fabric.n_ports
+        for kind, i in self.paged_entries:
+            leaf = req_cache[kind][i]["k"]
+            hkv = leaf.shape[-2]
+            lead = int(np.prod(leaf.shape[:-4])) if leaf.ndim > 4 else 1
+            if hkv != n or (lead * span) % n:
+                return False
+        return True
 
-    def free(self, slot: int) -> None:
-        self.table.free(slot)
+    def _pool_install(self, plans, stats=None, burst=None) -> None:
+        """Install a wave into the shared pool: burst-eligible slots ride
+        one write-network flush, the rest splice per leaf."""
+        n = self.fabric.n_ports if self.fabric is not None else 0
+        # burst=False forces the splice; True/None burst wherever the slot's
+        # extents fit the network geometry (a forced True cannot override it)
+        use_burst = {slot: burst is not False
+                     and self._burst_eligible(rc, span)
+                     for slot, rc, span in plans}
+        moved: Dict[str, jax.Array] = {}
+        staged = []
+        sched = None
+        for slot, req_cache, span in plans:
+            if not use_burst[slot] or span == 0:
+                continue
+            if sched is None:
+                sched = BurstScheduler(self.fabric, stats=stats)
+            for kind, i in self.paged_entries:
+                for name in ("k", "v"):
+                    frames = self._req_frames(req_cache, kind, i, name, span)
+                    d = frames.shape[-1]
+                    lines = frames.reshape(-1, n, d)
+                    tag = f"prefill/{slot}/{kind}{i}/{name}"
+                    sched.enqueue_write(tag, _lines_to_banked(lines, n))
+                    staged.append((tag, frames.shape))
+        if sched is not None:
+            sched.issue()
+            out = sched.commit()
+            moved = {tag: out[tag].reshape(shape) for tag, shape in staged}
+            self.prefill_bursts += 1
+            if stats is not None:
+                stats.prefill_bursts += 1
+        for slot, req_cache, span in plans:
+            if span and not use_burst[slot]:
+                self.prefill_splices += 1
+            for kind, i in self.paged_entries:
+                for name in ("k", "v"):
+                    tag = f"prefill/{slot}/{kind}{i}/{name}"
+                    frames = (moved[tag] if tag in moved else
+                              self._req_frames(req_cache, kind, i, name, span))
+                    leaf = _install_pool_leaf(
+                        self.caches[kind][i][name], frames,
+                        self.pool.table[slot], span, self.table.page_size)
+                    self._set_leaf(kind, i, name, leaf)
+            self._splice_unpaged(slot, req_cache)
+
+    def _set_leaf(self, kind: str, i: int, name: str, leaf) -> None:
+        entry = dict(self.caches[kind][i])
+        entry[name] = leaf
+        seq = list(self.caches[kind])
+        seq[i] = entry
+        self.caches = {**self.caches, kind: seq}
+
+    def _splice_unpaged(self, slot: int, req_cache) -> None:
+        """Install the non-paged leaves (ring windows, recurrent/SSM state)
+        into the slot's dense batch axis — the fabric's control traffic."""
+        paged = set(self.paged_entries)
+        max_slots = self.max_slots
+
+        def one(path, batch_leaf, req_leaf):
+            kind, i, name = _leaf_entry(path)
+            if (kind, i) in paged and name in ("k", "v"):
+                return batch_leaf
+            baxis = 1 if (batch_leaf.ndim >= 4
+                          and batch_leaf.shape[1] == max_slots) else 0
+            idx = [slice(None)] * batch_leaf.ndim
+            idx[baxis] = slice(slot, slot + 1)
+            return batch_leaf.at[tuple(idx)].set(req_leaf)
+
+        self.caches = jax.tree_util.tree_map_with_path(
+            one, self.caches, req_cache)
+
+
+def _lines_to_banked(lines: jax.Array, n: int) -> jax.Array:
+    """Line-major frames ``[L, N, D]`` → the banked ``[G, N, N, D]`` buffer
+    whose write-network image is exactly ``lines`` (write ∘ bank is the
+    identity — the accelerator side holds port-major head streams and the
+    write network reassembles the wide DRAM lines)."""
+    return pm_to_banked(jnp.swapaxes(lines, 0, 1), n)    # [N, L, D] streams
+
+
+def _install_pool_leaf(pool_leaf: jax.Array, frames: jax.Array,
+                       table_row: np.ndarray, span: int,
+                       page_size: int) -> jax.Array:
+    """Scatter a prompt's ``span`` line-major frames into the physical pages
+    ``table_row`` maps (full pages in one vectorized set, plus the partial
+    tail page).  Indices are host-side ints — admission is eager."""
+    if span == 0:
+        return pool_leaf
+    page_axis = pool_leaf.ndim - 4
+    n_full, tail = divmod(span, page_size)
+    n_pages_used = n_full + (1 if tail else 0)
+    phys = [int(table_row[p]) for p in range(n_pages_used)]
+    lead = frames.shape[:-3]
+    if n_full:
+        data = frames[..., : n_full * page_size, :, :].reshape(
+            lead + (n_full, page_size) + frames.shape[-2:])
+        idx = [slice(None)] * pool_leaf.ndim
+        idx[page_axis] = np.asarray(phys[:n_full])
+        pool_leaf = pool_leaf.at[tuple(idx)].set(data)
+    if tail:
+        idx = [slice(None)] * pool_leaf.ndim
+        idx[page_axis] = phys[-1]
+        idx[page_axis + 1] = slice(0, tail)
+        pool_leaf = pool_leaf.at[tuple(idx)].set(
+            frames[..., n_full * page_size:, :, :])
+    return pool_leaf
 
 
 def _leaf_name(path) -> str:
@@ -127,3 +459,18 @@ def _leaf_name(path) -> str:
                         for k in path
                         if hasattr(k, "key") or hasattr(k, "name")]
     return names[-1] if names else ""
+
+
+def _leaf_entry(path) -> Tuple[str, int, str]:
+    """``(kind, index, leaf_name)`` of a cache-tree path, e.g.
+    ``("unit", 0, "k")``."""
+    kind = idx = name = None
+    for k in path:
+        if hasattr(k, "key"):
+            if kind is None:
+                kind = k.key
+            else:
+                name = k.key
+        elif hasattr(k, "idx") and idx is None:
+            idx = k.idx
+    return kind, idx if idx is not None else -1, name or ""

@@ -44,7 +44,10 @@ adjacent groups; the word-axis order inside a stream's extent is a scheduler
 internal).  Odd word counts therefore degrade the group to a narrower fold,
 never to an error, and the unfold on arrival is an exact bitcast — parity is
 guaranteed because the networks are pure word movement.  ``pack="pad"``
-never folds (it is the A/B baseline layout).  On XLA:CPU the fold is
+folds too — on its padded word axis (the factor must divide the padded
+width ``w_max``), so the pack A/B isolates packing from lane width.  At
+``word_fold=1`` the pad layout is byte-for-byte the PR 1 baseline (raw
+payload dtype, no integer view).  On XLA:CPU the fold is
 roughly wall-clock-neutral (the widening view costs what the lane savings
 recoup); it exists to model TPU lane packing, where a u32/u64 lane is the
 unit the VPU actually moves — and it halves/quarters the elements every
@@ -95,9 +98,14 @@ class SchedulerStats:
     removed from the network's lane view (they ride inside wider machine
     words instead — a fold of 2 folds away half of a burst's elements), so
     ``words_moved - words_folded`` is the post-fold lane traffic the network
-    actually touches.  ``kernel_bursts`` counts the network calls that
-    lowered through the fused single-kernel burst path
-    (:meth:`repro.fabric.Fabric.read_burst` with kernels enabled).
+    actually touches (for the pad layout the fold rides the padded width,
+    so folded counts include padding riding wider lanes).  ``kernel_bursts``
+    counts the network calls that lowered through the fused single-kernel
+    burst path (:meth:`repro.fabric.Fabric.read_burst` with kernels
+    enabled).  ``prefill_bursts`` counts admission waves the serving engine
+    installed through one shared write burst (``prefill/*`` streams — see
+    :meth:`repro.fabric.PagedKVCache.admit_wave`) instead of per-layer
+    splices.
     """
     streams_served: int = 0
     flushes: int = 0
@@ -106,6 +114,7 @@ class SchedulerStats:
     words_padded: int = 0
     words_folded: int = 0
     kernel_bursts: int = 0
+    prefill_bursts: int = 0
 
     @property
     def calls_saved(self) -> int:
@@ -300,14 +309,38 @@ class BurstScheduler:
             out[q.spec.name] = _unpack_tile(piece, q, n, read, fold)
         return out
 
+    def _padded_fold(self, streams: List[_Queued], w_max: int) -> int:
+        """Machine-word fold factor for one pad-layout dtype group: every
+        stream is padded to ``w_max`` words, so the factor just has to
+        divide ``w_max`` (and the wider machine word must exist).  1 = no
+        folding — and at 1 the pad path keeps its raw payload dtype, so the
+        PR 1 baseline measurement is unchanged."""
+        cap = 4 if self.word_fold == "auto" else int(self.word_fold)
+        dt = jnp.dtype(streams[0].payload.dtype)
+        if (cap == 1 or jnp.issubdtype(dt, jnp.bool_)
+                or jnp.issubdtype(dt, jnp.complexfloating)):
+            return 1
+        for f in (4, 2):
+            if (f <= cap and machine_word_dtype(dt.itemsize * f) is not None
+                    and w_max % f == 0):
+                return f
+        return 1
+
     def _run_padded(self, streams: List[_Queued],
                     read: bool) -> Dict[str, jax.Array]:
         """Pad-to-widest fallback (``pack="pad"``): streams concatenate along
         the line axis after zero-padding narrower words to the widest — the
-        network moves the padding, which is what packed mode eliminates."""
+        network moves the padding, which is what packed mode eliminates.
+        Under ``word_fold`` the padded word axis folds into wider machine
+        words before the network runs, same as the packed layout, so the
+        pack A/B isolates the packing effect from the lane width."""
         n = self.fabric.n_ports
         out: Dict[str, jax.Array] = {}
         w_max = max(q.width for q in streams)
+        fold = self._padded_fold(streams, w_max)
+        wide = (machine_word_dtype(
+            jnp.dtype(streams[0].payload.dtype).itemsize * fold)
+            if fold > 1 else None)
         flat = []
         for q in streams:
             lead = q.payload.shape[:2] if read else q.payload.shape[:3]
@@ -318,6 +351,11 @@ class BurstScheduler:
             if q.width < w_max:
                 pad = [(0, 0)] * (x.ndim - 1) + [(0, w_max - q.width)]
                 x = jnp.pad(x, pad)
+            if fold > 1:
+                elems = lines * n * w_max          # lane view incl. padding
+                self.stats.words_folded += elems - elems // fold
+                x = jax.lax.bitcast_convert_type(
+                    x.reshape(x.shape[:-1] + (w_max // fold, fold)), wide)
             flat.append(x)
         burst = jnp.concatenate(flat, axis=0)
         moved = self.fabric.read(burst) if read else self.fabric.write(burst)
@@ -329,6 +367,8 @@ class BurstScheduler:
                      else q.payload.shape[0] * n)
             piece = moved[off:off + count]
             off += count
+            if fold > 1:
+                piece = _unfold_view(piece, q.payload.dtype)
             piece = piece[..., :q.width]
             out[q.spec.name] = piece.reshape(piece.shape[:-1] + q.rest_shape)
         return out

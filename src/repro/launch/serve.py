@@ -8,8 +8,12 @@ CPU with real tokens; ``--engine`` serves through the continuous-batching
 one-shot batch generate — its decode step is burst-scheduled (one read +
 one write network invocation per dtype per step; ``--pack`` selects the
 burst layout, ``--word-fold`` the machine-word lane folding cap,
-``--serve-fsdp`` adds the weight stream to the read burst).  On the medusa
-fabric with kernels enabled each burst lowers as one fused Pallas launch.
+``--serve-fsdp`` adds the weight stream to the read burst).  KV storage
+defaults to the shared physical page pool (``--paged-pool`` /
+``--no-paged-pool``, ``--pool-pages`` sizes it): gather-based decode
+through the per-slot page table, admission installed as ``prefill/*``
+write-burst traffic, retirement reclaims pages.  On the medusa fabric with
+kernels enabled each burst lowers as one fused Pallas launch.
 """
 
 from __future__ import annotations
@@ -39,6 +43,16 @@ def main():
                     choices=[None, "medusa", "crossbar", "oracle", "fused"])
     ap.add_argument("--page-size", type=int, default=0,
                     help="KV page size in timesteps (0 = fabric default)")
+    ap.add_argument("--paged-pool", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="back the engine's full-attention KV in one shared "
+                         "physical page pool with gather-based decode "
+                         "(default: FabricConfig.paged_pool, on); "
+                         "--no-paged-pool keeps the dense per-slot "
+                         "reservation (the A/B baseline)")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="physical pages in the shared pool (0 = the dense "
+                         "reservation's worth: max_slots * pages_per_slot)")
     ap.add_argument("--engine", action="store_true",
                     help="serve through the paged continuous-batching engine")
     ap.add_argument("--pack", default=None, choices=[None, "packed", "pad"],
@@ -74,6 +88,10 @@ def main():
                                             word_fold=fold))
     if args.serve_fsdp:
         cfg = dataclasses.replace(cfg, serve_fsdp=True)
+    if args.paged_pool is not None:
+        cfg = dataclasses.replace(
+            cfg, fabric=dataclasses.replace(cfg.resolved_fabric,
+                                            paged_pool=args.paged_pool))
     fab = cfg.resolved_fabric
 
     data = SyntheticLM(cfg, batch=args.batch,
@@ -90,7 +108,8 @@ def main():
     t0 = time.time()
     if args.engine:
         from repro.serving import Request, ServingEngine
-        eng = ServingEngine(cfg, params, max_slots=args.batch, t_max=t_max)
+        eng = ServingEngine(cfg, params, max_slots=args.batch, t_max=t_max,
+                            pool_pages=args.pool_pages)
         prompts = np.asarray(batch["tokens"])
         reqs = [Request(i, prompts[i], max_new_tokens=args.gen_len)
                 for i in range(args.batch)]
@@ -103,13 +122,26 @@ def main():
               f"({args.batch * args.gen_len / dt:.1f} tok/s); "
               f"admission moved {kv.tokens_moved} of "
               f"{kv.tokens_moved_dense} dense-splice timesteps")
+        if kv.paged:
+            pool = kv.pool
+            print(f"page pool: {pool.n_pages} physical pages x "
+                  f"{pool.page_size} timesteps "
+                  f"(dense reservation {kv.dense_reserved_pages} pages); "
+                  f"{pool.pages_allocated} allocated, "
+                  f"{pool.pages_reclaimed} reclaimed, "
+                  f"{pool.pages_in_use} in use at exit; "
+                  f"{kv.prefill_bursts} prefill write bursts, "
+                  f"{kv.prefill_splices} splice fallbacks")
+        else:
+            print("page pool: off (dense per-slot reservation)")
         fs = eng.fabric_stats
         if fs.flushes:
             print(f"fabric per step: {fs.network_calls} network calls for "
                   f"{fs.streams_served} streams over {fs.flushes} bursts "
                   f"({fs.words_moved} words moved, {fs.words_padded} padded, "
                   f"{fs.words_folded} folded into machine words, "
-                  f"{fs.kernel_bursts} fused-kernel bursts)")
+                  f"{fs.kernel_bursts} fused-kernel bursts, "
+                  f"{fs.prefill_bursts} prefill bursts)")
         else:
             print("fabric: decode step unscheduled (geometry fallback)")
         print("sample:", reqs[0].generated[:16])

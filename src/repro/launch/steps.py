@@ -66,11 +66,11 @@ def resolve_fabric(cfg: ModelConfig, shape: ShapeConfig) -> FabricConfig:
     be the fabric's W_line (one timestep across the port heads) — catching
     geometry errors here costs nothing; inside the jitted step they surface
     as shape errors deep in the layer scan.  The burst packing mode
-    (``FabricConfig.pack``) is validated on the same path.  Pure validator:
-    page clamping to the cache depth happens where pages are allocated
+    (``FabricConfig.pack``) and — for decode shapes — the paged-pool page
+    geometry are validated on the same path.  Pure validator: page clamping
+    to the cache depth happens where pages are allocated
     (``ServingEngine.__init__``).
     """
-    del shape
     fab = cfg.resolved_fabric
     has_attn = any(t in ("A", "L") for t in cfg.layer_types())
     if cfg.fabric is not None and has_attn and cfg.n_kv_heads:
@@ -79,6 +79,14 @@ def resolve_fabric(cfg: ModelConfig, shape: ShapeConfig) -> FabricConfig:
             raise ValueError(
                 f"{cfg.name}: fabric W_line={fab.line_width} does not match "
                 f"the KV line (n_kv_heads*head_dim={want})")
+        if (fab.paged_pool and shape.kind == "decode"
+                and fab.page_size > shape.seq_len):
+            # a page deeper than the whole cache can only be a config error:
+            # the engine would clamp it, but an explicit fabric asking for
+            # it at a decode shape deserves a loud failure at build time
+            raise ValueError(
+                f"{cfg.name}: fabric page_size={fab.page_size} exceeds the "
+                f"decode cache depth ({shape.name}: seq_len={shape.seq_len})")
     return fab
 
 

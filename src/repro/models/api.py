@@ -71,19 +71,32 @@ def prefill_fn(params, batch: dict, cfg: ModelConfig, t_max: int):
                       kv_chunk=kv_chunk)
 
 
-def init_cache(cfg: ModelConfig, batch: int, t_max: int):
+def init_cache(cfg: ModelConfig, batch: int, t_max: int,
+               pool_pages: int = 0, page_size: int = 0):
+    """Decode-cache pytree; ``pool_pages > 0`` backs the full-attention
+    leaves with a shared physical page pool (decoder-only families — see
+    :func:`repro.models.lm.init_cache`)."""
     if cfg.family == "audio":
+        assert not pool_pages, "paged pool covers decoder-only families"
         return whisper.init_cache(cfg, batch, t_max)
-    return lm.init_cache(cfg, batch, t_max)
+    return lm.init_cache(cfg, batch, t_max, pool_pages=pool_pages,
+                         page_size=page_size)
 
 
-def decode_fn(params, token, caches, pos, cfg: ModelConfig, sched=None):
+def decode_fn(params, token, caches, pos, cfg: ModelConfig, sched=None,
+              page_table=None, page_size: int = 0, t_depth: int = 0):
     """One decode step.  ``sched`` (a :class:`repro.fabric.BurstScheduler`)
     routes the step's KV banking — and ``serve_fsdp`` weight streaming —
-    through one read and one write network burst (decoder-only families)."""
+    through one read and one write network burst (decoder-only families).
+    ``page_table`` (+ static ``page_size``/``t_depth``) switches the
+    full-attention leaves to the shared physical page pool with
+    gather-based decode (``FabricConfig.paged_pool``)."""
     if cfg.family == "audio":
+        assert page_table is None, "paged pool covers decoder-only families"
         return whisper.decode_step(params, token, caches, pos, cfg)
-    return lm.decode_step(params, token, caches, pos, cfg, sched=sched)
+    return lm.decode_step(params, token, caches, pos, cfg, sched=sched,
+                          page_table=page_table, page_size=page_size,
+                          t_depth=t_depth)
 
 
 def greedy_generate(params, prompt, cfg: ModelConfig, steps: int,

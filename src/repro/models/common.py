@@ -15,7 +15,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.fabric.fabric import Fabric
+from repro.fabric.fabric import Fabric, pm_to_banked
 from repro.parallel.sharding import shard
 
 
@@ -288,11 +288,59 @@ def banked_to_port_major(banked: jax.Array, lead_shape) -> jax.Array:
 
 def port_major_to_banked(pm: jax.Array) -> jax.Array:
     """Port-major ``[..., Hkv, T, D]`` → write-network input ``[G, N, N, D]``
-    (inverse of :func:`banked_to_port_major`)."""
+    (inverse of :func:`banked_to_port_major`; the banked layout invariant
+    itself lives in :func:`repro.fabric.fabric.pm_to_banked`)."""
     x = jnp.moveaxis(pm, pm.ndim - 3, 0)          # [Hkv, ..., T, D]
     n, d = x.shape[0], x.shape[-1]
-    x = x.reshape(n, -1, d)                       # [Hkv, L, D]
-    return x.reshape(n, x.shape[1] // n, n, d).transpose(1, 0, 2, 3)
+    return pm_to_banked(x.reshape(n, -1, d), n)   # [Hkv, L, D] streams
+
+
+# ----------------------------------------------------------------------------
+# shared physical page pool: gather-based decode
+# ----------------------------------------------------------------------------
+#
+# Under ``FabricConfig.paged_pool`` the serving engine backs every
+# full-attention leaf with one shared ``[n_pages, page_size, Hkv, D]``
+# physical region; a per-slot logical→physical page table indirects each
+# slot's time axis into it.  The decode step takes the table as an operand
+# and *gathers* each slot's mapped frames — in port-major space when the
+# step is burst-scheduled, so the gather composes with the banked layout
+# the shared read burst already produced (the burst moves the pool's F
+# frames once; the gather is a relabel on the network's output).  Every
+# valid position gathers exactly the frame the dense layout would hold, so
+# logits are bit-identical to the dense engine.
+
+def page_gather_indices(page_table: jax.Array, page_size: int,
+                        t_depth: int) -> jax.Array:
+    """Per-slot page table ``[B, pages_per_slot]`` (``-1`` = unmapped) →
+    physical **frame** indices ``[B, t_depth]`` into the pool's flattened
+    ``n_pages * page_size`` frame axis.  Unmapped positions get a far
+    out-of-range sentinel: gathers fill them with zeros (always behind the
+    decode position mask), scatters drop them."""
+    t = jnp.arange(t_depth, dtype=jnp.int32)
+    pt = page_table[:, t // page_size]                       # [B, T]
+    return jnp.where(pt < 0, jnp.int32(2 ** 30),
+                     pt * jnp.int32(page_size) + t % page_size)
+
+
+def gather_pool_frames(pool_flat: jax.Array, phys: jax.Array,
+                       axis: int) -> jax.Array:
+    """Gather per-slot frames from a pool's flattened frame axis ``F`` at
+    ``axis``: ``phys [B, T]`` replaces that axis with ``[B, T]`` in the
+    result.  Out-of-range (unmapped) indices read as zeros."""
+    return jnp.take(pool_flat, phys, axis=axis, mode="fill", fill_value=0)
+
+
+def scatter_pool_frames(pool_flat: jax.Array, dense: jax.Array,
+                        phys: jax.Array, axis: int) -> jax.Array:
+    """Inverse of :func:`gather_pool_frames`: write the per-slot dense
+    frames (``[B, T]`` at ``axis``) back to their mapped physical frames;
+    unmapped positions drop.  Mapped frames are owned by exactly one slot
+    (the pool's free list never double-maps), so the scatter is exact."""
+    idx = [slice(None)] * pool_flat.ndim
+    idx[axis] = phys.reshape(-1)
+    upd = dense.reshape(dense.shape[:axis] + (-1,) + dense.shape[axis + 2:])
+    return pool_flat.at[tuple(idx)].set(upd, mode="drop")
 
 
 def _pm_cache_write(cache_pm: jax.Array, new: jax.Array,

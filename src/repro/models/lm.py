@@ -80,9 +80,20 @@ def init_params(cfg: ModelConfig, key) -> dict:
 # caches (decode)
 # ----------------------------------------------------------------------------
 
-def _block_cache(t: str, cfg: ModelConfig, batch: int, t_max: int, dtype):
+def _block_cache(t: str, cfg: ModelConfig, batch: int, t_max: int, dtype,
+                 pool=None):
     hd = cfg.resolved_head_dim
     if t in ("A", "L"):
+        if pool is not None and _full_attn(t, cfg):
+            # shared physical page pool: one [n_pages, page_size, Hkv, D]
+            # region per full-attention leaf — slots reach their frames
+            # through the engine's logical→physical page table, so the
+            # leaf has no per-slot batch axis at all
+            n_pages, page_size = pool
+            return {"k": jnp.zeros((n_pages, page_size, cfg.n_kv_heads, hd),
+                                   dtype),
+                    "v": jnp.zeros((n_pages, page_size, cfg.n_kv_heads, hd),
+                                   dtype)}
         # local layers only ever need the sliding window
         length = min(t_max, cfg.sliding_window) if (
             t == "L" and cfg.sliding_window) else t_max
@@ -103,17 +114,38 @@ def _block_cache(t: str, cfg: ModelConfig, batch: int, t_max: int, dtype):
     raise ValueError(t)
 
 
-def init_cache(cfg: ModelConfig, batch: int, t_max: int) -> dict:
+def init_cache(cfg: ModelConfig, batch: int, t_max: int,
+               pool_pages: int = 0, page_size: int = 0) -> dict:
+    """The batched decode-cache pytree.  With ``pool_pages > 0`` every
+    full-attention leaf is backed by a shared physical page pool
+    ``[pool_pages, page_size, Hkv, D]`` instead of a dense per-slot
+    ``[batch, t_max]`` reservation (ring/recurrent/SSM leaves keep their
+    per-slot layout — they are O(window)/O(1) in time)."""
     dtype = cfg.param_dtype
+    pool = (pool_pages, page_size) if pool_pages else None
     unit, reps, tail = pattern_unit(cfg)
     unit_caches = []
     for t in unit:
         if reps > 0:
-            c = _block_cache(t, cfg, batch, t_max, dtype)
+            c = _block_cache(t, cfg, batch, t_max, dtype, pool=pool)
             unit_caches.append(jax.tree.map(
                 lambda x: jnp.broadcast_to(x, (reps,) + x.shape), c))
     return {"unit": unit_caches,
-            "tail": [_block_cache(t, cfg, batch, t_max, dtype) for t in tail]}
+            "tail": [_block_cache(t, cfg, batch, t_max, dtype, pool=pool)
+                     for t in tail]}
+
+
+def paged_entries(cfg: ModelConfig):
+    """The ``(kind, index)`` cache entries the paged pool backs: every
+    full-attention layer's ``k``/``v`` (the same set the burst plan banks).
+    Ring, recurrent and SSM caches stay dense per-slot."""
+    unit, reps, tail = pattern_unit(cfg)
+    out = []
+    for kind, types in (("unit", unit if reps > 0 else ""), ("tail", tail)):
+        for i, t in enumerate(types):
+            if _full_attn(t, cfg):
+                out.append((kind, i))
+    return out
 
 
 # ----------------------------------------------------------------------------
@@ -285,7 +317,8 @@ def forward(params, tokens, cfg: ModelConfig, *, patch_embeds=None,
     return cm.logits_apply(params["embed"], x, cfg)
 
 
-def decode_step(params, token, caches, pos, cfg: ModelConfig, sched=None):
+def decode_step(params, token, caches, pos, cfg: ModelConfig, sched=None,
+                page_table=None, page_size: int = 0, t_depth: int = 0):
     """One serving decode step: ``token [B, 1]`` + caches at ``pos`` →
     (logits [B, 1, V], new caches).  KV caches are read through the Medusa
     port-major layout engine (cfg.kv_layout).
@@ -299,13 +332,29 @@ def decode_step(params, token, caches, pos, cfg: ModelConfig, sched=None):
     layer, bit-identical because banking is a permutation that commutes
     with the single-timestep update.  Falls back to the per-layer path when
     the fabric is not on the port-per-KV-head geometry or a leaf's line
-    count does not divide N."""
+    count does not divide N.
+
+    With ``page_table`` (``int32 [B, pages_per_slot]``, ``-1`` = unmapped),
+    the full-attention leaves are shared physical page pools
+    (:func:`init_cache` with ``pool_pages``): the step gathers each slot's
+    mapped frames through the table — after the read burst, in port-major
+    space, so the gather composes with the banked layout — attends on the
+    gathered dense view, and scatters the updated frames back before the
+    write burst.  Bit-identical to the dense layout: every valid position
+    gathers exactly the frame the dense cache would hold.  ``page_size``
+    and ``t_depth`` (the dense time depth the gather reconstructs) are
+    static step parameters."""
     pos = jnp.asarray(pos, jnp.int32)
     positions = pos[None] if pos.ndim == 0 else pos[:, None]
+    phys = (None if page_table is None
+            else cm.page_gather_indices(page_table, page_size, t_depth))
     plan = _burst_plan(cfg, caches) if sched is not None else None
     if plan is not None:
         return _decode_step_scheduled(params, token, caches, pos, positions,
-                                      cfg, sched, plan)
+                                      cfg, sched, plan, phys=phys)
+    if phys is not None:
+        return _decode_step_paged_fallback(params, token, caches, pos,
+                                           positions, cfg, phys)
     x = cm.embed_apply(params["embed"], token)
     x, new_caches = _scan_blocks(params, x, cfg, positions=positions,
                                  caches=caches, pos=pos, remat=False)
@@ -349,8 +398,14 @@ def _burst_plan(cfg: ModelConfig, caches):
     return plan or None
 
 
+def _flat_frames(pool: jax.Array) -> jax.Array:
+    """Pool leaf ``[lead..., n_pages, page_size, Hkv, D]`` → flattened frame
+    axis ``[lead..., F, Hkv, D]`` (F = n_pages * page_size)."""
+    return pool.reshape(pool.shape[:-4] + (-1,) + pool.shape[-2:])
+
+
 def _decode_step_scheduled(params, token, caches, pos, positions,
-                           cfg: ModelConfig, sched, plan):
+                           cfg: ModelConfig, sched, plan, phys=None):
     """The burst-scheduled decode step (see :func:`decode_step`).
 
     Burst 1 (read network): every planned KV leaf — and, under
@@ -358,7 +413,12 @@ def _decode_step_scheduled(params, token, caches, pos, positions,
     all-gather traffic) — moves through one read invocation per dtype.
     Burst 2 (write network): the updated port-major caches return to
     line-major.  The issue()/commit() split keeps the transfers overlappable
-    with consumer compute under JAX async dispatch / XLA scheduling."""
+    with consumer compute under JAX async dispatch / XLA scheduling.
+
+    Under the paged pool (``phys`` — per-slot physical frame indices), the
+    bursts carry the pool's F frames instead of the dense [B, t] regions;
+    the per-slot gather (and the update's scatter) happens in port-major
+    space on the network's output, composing with the banked layout."""
     fab = cfg.resolved_fabric
     n = fab.n_ports
 
@@ -368,8 +428,11 @@ def _decode_step_scheduled(params, token, caches, pos, positions,
         streamed = _enqueue_weight_stream(sched, params, n)
     for kind, i in plan:
         for leaf_name in ("k", "v"):
+            leaf = caches[kind][i][leaf_name]
+            if phys is not None:
+                leaf = _flat_frames(leaf)
             sched.enqueue_read(f"{kind}{i}/{leaf_name}",
-                               cm.kv_leaf_to_lines(caches[kind][i][leaf_name]))
+                               cm.kv_leaf_to_lines(leaf))
     sched.issue()
     moved = sched.commit()
     if streamed is not None:
@@ -377,12 +440,27 @@ def _decode_step_scheduled(params, token, caches, pos, positions,
 
     pm = {"unit": [None] * len(caches["unit"]),
           "tail": [None] * len(caches["tail"])}
+    pm_pools = {}
     for kind, i in plan:
-        lead = caches[kind][i]["k"].shape[:-2]
-        pm[kind][i] = {
-            leaf_name + "_pm": cm.banked_to_port_major(
+        if phys is None:
+            lead = caches[kind][i]["k"].shape[:-2]
+            pm[kind][i] = {
+                leaf_name + "_pm": cm.banked_to_port_major(
+                    moved[f"{kind}{i}/{leaf_name}"], lead)
+                for leaf_name in ("k", "v")}
+            continue
+        lead = _flat_frames(caches[kind][i]["k"]).shape[:-2]
+        entry = {}
+        for leaf_name in ("k", "v"):
+            # [lead?, Hkv, F, D]: the banked pool, each port's frame stream
+            pool_pm = cm.banked_to_port_major(
                 moved[f"{kind}{i}/{leaf_name}"], lead)
-            for leaf_name in ("k", "v")}
+            pm_pools[(kind, i, leaf_name)] = pool_pm
+            dense_pm = cm.gather_pool_frames(pool_pm, phys,
+                                             pool_pm.ndim - 2)
+            # [lead?, Hkv, B, T, D] → [lead?, B, Hkv, T, D]
+            entry[leaf_name + "_pm"] = jnp.moveaxis(dense_pm, -3, -4)
+        pm[kind][i] = entry
 
     x = cm.embed_apply(params["embed"], token)
     x, new_caches = _scan_blocks(params, x, cfg, positions=positions,
@@ -392,9 +470,16 @@ def _decode_step_scheduled(params, token, caches, pos, positions,
     # -- burst 2: updated port-major caches → line-major --------------------
     for kind, i in plan:
         for leaf_name in ("k", "v"):
-            sched.enqueue_write(
-                f"{kind}{i}/{leaf_name}",
-                cm.port_major_to_banked(new_caches[kind][i][leaf_name + "_pm"]))
+            new_pm = new_caches[kind][i][leaf_name + "_pm"]
+            if phys is not None:
+                # scatter the updated per-slot frames back into the
+                # port-major pool before it returns through the write burst
+                pool_pm = pm_pools[(kind, i, leaf_name)]
+                upd = jnp.moveaxis(new_pm, -4, -3)
+                new_pm = cm.scatter_pool_frames(pool_pm, upd, phys,
+                                                pool_pm.ndim - 2)
+            sched.enqueue_write(f"{kind}{i}/{leaf_name}",
+                                cm.port_major_to_banked(new_pm))
     sched.issue()
     lines_back = sched.commit()
     for kind, i in plan:
@@ -403,6 +488,37 @@ def _decode_step_scheduled(params, token, caches, pos, positions,
             leaf_name: lines_back[f"{kind}{i}/{leaf_name}"].reshape(shape)
             for leaf_name in ("k", "v")}
 
+    x = cm.apply_norm(x, params["final_norm"], cfg.norm)
+    return cm.logits_apply(params["embed"], x, cfg), new_caches
+
+
+def _decode_step_paged_fallback(params, token, caches, pos, positions,
+                                cfg: ModelConfig, phys):
+    """Per-layer paged decode (unscheduled, off-geometry, or the ``fused``
+    fabric): gather each pool into its dense line-major view, run the
+    per-layer path unchanged, scatter the updated frames back.  Bit-parity
+    with the dense layout for the same reason as the scheduled form."""
+    entries = paged_entries(cfg)
+    dense_caches = {"unit": list(caches["unit"]), "tail": list(caches["tail"])}
+    for kind, i in entries:
+        entry = dict(caches[kind][i])
+        for leaf_name in ("k", "v"):
+            flat = _flat_frames(entry[leaf_name])
+            entry[leaf_name] = cm.gather_pool_frames(flat, phys,
+                                                     flat.ndim - 3)
+        dense_caches[kind][i] = entry
+    x = cm.embed_apply(params["embed"], token)
+    x, new_caches = _scan_blocks(params, x, cfg, positions=positions,
+                                 caches=dense_caches, pos=pos, remat=False)
+    for kind, i in entries:
+        entry = dict(new_caches[kind][i])
+        for leaf_name in ("k", "v"):
+            pool = caches[kind][i][leaf_name]
+            flat = cm.scatter_pool_frames(_flat_frames(pool),
+                                          entry[leaf_name], phys,
+                                          pool.ndim - 4)
+            entry[leaf_name] = flat.reshape(pool.shape)
+        new_caches[kind][i] = entry
     x = cm.apply_norm(x, params["final_norm"], cfg.norm)
     return cm.logits_apply(params["embed"], x, cfg), new_caches
 

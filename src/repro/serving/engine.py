@@ -4,9 +4,16 @@ A fixed decode batch of ``max_slots`` sequences advances one token per step;
 finished sequences retire and their slots are immediately refilled from the
 queue.  KV storage goes through :class:`repro.fabric.PagedKVCache`: each
 slot's time axis is divided into fixed-size pages (``page_size`` timesteps =
-a burst of lines through the fabric), and admission writes only the pages
-the new prompt occupies — a page remap instead of the seed engine's full
-``t_max`` splice-copy.  Per-slot positions are first-class in the decode
+a burst of lines through the fabric).  Under ``FabricConfig.paged_pool``
+(the default) the pages live in one **shared physical pool** per
+full-attention leaf — free-list allocation at admission and decode growth,
+true reclamation at retirement, per-slot logical→physical page table as a
+decode-step operand (gather-based attention) — so short and long sequences
+share HBM and ``kv.occupancy`` measures real frames.  Admission installs
+each wave's page-aligned KV extents through one ``prefill/*`` write burst
+(1 network call per dtype; per-layer splice as the off-geometry fallback)
+instead of the seed engine's full ``t_max`` splice-copy.  Per-slot
+positions are first-class in the decode
 path (``models.common._cache_write`` and friends), so slots at different
 depths coexist in one batched step — the production pattern behind
 vLLM-style serving, on top of the Medusa KV layout engine
@@ -52,7 +59,8 @@ class Request:
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, max_slots: int, t_max: int,
-                 page_size: int = 0):
+                 page_size: int = 0, paged_pool: Optional[bool] = None,
+                 pool_pages: int = 0, prefill_burst: Optional[bool] = None):
         assert cfg.family != "audio", "engine covers decoder-only families"
         self.cfg = cfg
         self.params = params
@@ -64,24 +72,58 @@ class ServingEngine:
         # burst; positions beyond t_max are masked, so this is free capacity
         n = self.fabric.n_ports
         self.t_alloc = -(-t_max // n) * n
+        ps = page_size or min(cfg.resolved_fabric.page_size, self.t_alloc)
+        self.page_size = ps
+        # shared physical page pool (FabricConfig.paged_pool, default on):
+        # full-attention leaves become [pool_pages, ps, Hkv, D] regions
+        # reached through the per-slot page table; families without
+        # full-attention leaves (pure SSM/recurrent) have nothing to pool
+        entries = lm.paged_entries(cfg)
+        self.paged = ((cfg.resolved_fabric.paged_pool if paged_pool is None
+                       else paged_pool) and bool(entries))
+        if self.paged:
+            pages_per_slot = -(-self.t_alloc // ps)
+            pool_pages = pool_pages or max_slots * pages_per_slot
+            # the pool rides the decode step's shared burst as one line
+            # stream, so its frame count rounds up to a multiple of N
+            while (pool_pages * ps) % n:
+                pool_pages += 1
+        else:
+            pool_pages = 0
+        self.prefill_burst = prefill_burst
         self.kv = PagedKVCache(
-            api.init_cache(cfg, max_slots, self.t_alloc), max_slots,
-            self.t_alloc,
-            page_size or min(cfg.resolved_fabric.page_size, self.t_alloc))
+            api.init_cache(cfg, max_slots, self.t_alloc,
+                           pool_pages=pool_pages, page_size=ps),
+            max_slots, self.t_alloc, ps, pool_pages=pool_pages,
+            paged_entries=entries if self.paged else (), fabric=self.fabric)
         self.pos = np.zeros((max_slots,), np.int32)      # next write position
         self.active: List[Optional[Request]] = [None] * max_slots
         self.tokens = np.zeros((max_slots, 1), np.int32)
         self.queue: List[Request] = []
+        # the step's [B, V] logits, left on device (readers pay the copy)
+        self.last_logits: Optional[jax.Array] = None
+        # pool mode: pages reserved per live slot for its full reach
+        # (prompt + generation) — admission is the only allocation gate, so
+        # decode growth can never exhaust the pool mid-flight
+        self._page_reserve: dict = {}
 
         # one scheduler instance per decode step: per-step KV banking (and
         # the serve_fsdp weight stream) runs as one read + one write network
         # burst per dtype.  ``fabric_stats`` accumulates at trace time, so
-        # after the first step it reads as the per-step traffic census.
+        # after the first step it reads as the per-step traffic census
+        # (plus one eager prefill burst per admission wave).
         self.fabric_stats = SchedulerStats()
 
-        def _step(p, tok, caches, pos):
-            sched = BurstScheduler(self.fabric, stats=self.fabric_stats)
-            return api.decode_fn(p, tok, caches, pos, cfg, sched=sched)
+        if self.paged:
+            def _step(p, tok, caches, pos, page_table):
+                sched = BurstScheduler(self.fabric, stats=self.fabric_stats)
+                return api.decode_fn(p, tok, caches, pos, cfg, sched=sched,
+                                     page_table=page_table, page_size=ps,
+                                     t_depth=self.t_alloc)
+        else:
+            def _step(p, tok, caches, pos):
+                sched = BurstScheduler(self.fabric, stats=self.fabric_stats)
+                return api.decode_fn(p, tok, caches, pos, cfg, sched=sched)
 
         self._decode = jax.jit(_step)
 
@@ -95,20 +137,45 @@ class ServingEngine:
         self.queue.append(req)
 
     def _admit(self) -> None:
+        """Fill free slots from the queue: prefill each prompt, then install
+        the whole wave's page-aligned KV extents through ONE write-network
+        flush (``prefill/*`` streams — ``fabric_stats.prefill_bursts``),
+        with the per-layer splice as the off-geometry fallback.  Pool mode
+        gates admission on free pages (head-of-line; retirement reclaims)."""
+        wave = []
         for slot in range(self.max_slots):
             if self.active[slot] is not None or not self.queue:
                 continue
+            if self.kv.paged:
+                # reserve the request's full reach (prompt + generation,
+                # capped by the cache depth) so decode growth can never
+                # exhaust the pool mid-flight — admission is the only gate
+                nxt = self.queue[0]
+                reach = min(len(nxt.prompt) + nxt.max_new_tokens, self.t_max)
+                need = self.kv.table.pages_for(reach)
+                if self._pool_headroom() < need:
+                    break                # wait for pages to be reclaimed
+                self._page_reserve[slot] = need
             req = self.queue.pop(0)
             prompt = jnp.asarray(req.prompt)[None, :]
             logits, req_cache = api.prefill_fn(
                 self.params, {"tokens": prompt}, self.cfg, self.t_alloc)
             # page remap: only the pages the prompt occupies move
-            self.kv.refill(slot, req_cache, len(req.prompt))
+            wave.append((slot, req_cache, len(req.prompt)))
             self.active[slot] = req
             self.pos[slot] = len(req.prompt)
             first = int(np.argmax(np.asarray(logits[0, -1])))
             req.generated.append(first)
             self.tokens[slot, 0] = first
+        if wave:
+            self.kv.admit_wave(wave, stats=self.fabric_stats,
+                               burst=self.prefill_burst)
+
+    def _pool_headroom(self) -> int:
+        """Free pages not spoken for by live slots' unexpanded reaches."""
+        return self.kv.pool.free_pages - sum(
+            max(0, need - self.kv.pool.mapped(s))
+            for s, need in self._page_reserve.items())
 
     # -- one engine step -----------------------------------------------------
     def step(self) -> int:
@@ -117,10 +184,15 @@ class ServingEngine:
         live = [s for s in range(self.max_slots) if self.active[s] is not None]
         if not live:
             return 0
-        logits, new_caches = self._decode(
-            self.params, jnp.asarray(self.tokens), self.kv.caches,
-            jnp.asarray(self.pos))
+        args = (self.params, jnp.asarray(self.tokens), self.kv.caches,
+                jnp.asarray(self.pos))
+        if self.paged:
+            logits, new_caches = self._decode(
+                *args, self.kv.page_table_device())
+        else:
+            logits, new_caches = self._decode(*args)
         self.kv.update(new_caches)
+        self.last_logits = logits[:, 0]
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
         for s in live:
             req = self.active[s]
@@ -132,9 +204,11 @@ class ServingEngine:
                     or self.pos[s] + 1 >= self.t_max):
                 req.done = True
                 self.active[s] = None
-                # return the slot's pages; stale frames are masked by the
-                # per-slot positions and overwritten on the next admission
+                # return the slot's pages (true reclamation in pool mode);
+                # stale frames are masked by the per-slot positions and
+                # overwritten on the next admission
                 self.kv.free(s)
+                self._page_reserve.pop(s, None)
         return len([s for s in range(self.max_slots)
                     if self.active[s] is not None])
 

@@ -148,17 +148,35 @@ def test_scheduled_decode_falls_back(why):
 
 def test_engine_decode_traffic_census():
     """The engine's traced decode step runs exactly 1 read + 1 write network
-    invocation per dtype per step, serving every full-attention leaf."""
+    invocation per dtype per step, serving every full-attention leaf; the
+    single admission wave adds exactly one eager prefill write burst."""
     ops.use_kernels(False)
     cfg = _fp32(get_smoke("starcoder2-15b"))
     params = api.init_params(cfg, KEY)
     eng = ServingEngine(cfg, params, max_slots=2, t_max=16)
     eng.submit(Request(0, np.asarray([3, 1, 4], np.int32), max_new_tokens=2))
     eng.run_to_completion(max_steps=8)
-    assert eng.fabric_stats.flushes == 2           # per traced step
-    assert eng.fabric_stats.network_calls == 2     # 1 read + 1 write (f32)
+    # 1 prefill write burst (eager, per admission wave) + 1 read + 1 write
+    # per traced decode step
+    assert eng.fabric_stats.prefill_bursts == 1
+    assert eng.fabric_stats.flushes == 3
+    assert eng.fabric_stats.network_calls == 3     # all f32
     assert eng.fabric_stats.words_padded == 0      # packed default
     assert eng.fabric_stats.words_moved > 0
+
+
+def test_engine_dense_mode_traffic_census_unchanged():
+    """With the pool off (the A/B baseline) the census is the PR 2 shape:
+    admission splices, the traced step is 1 read + 1 write burst."""
+    ops.use_kernels(False)
+    cfg = _fp32(get_smoke("starcoder2-15b"))
+    params = api.init_params(cfg, KEY)
+    eng = ServingEngine(cfg, params, max_slots=2, t_max=16, paged_pool=False)
+    eng.submit(Request(0, np.asarray([3, 1, 4], np.int32), max_new_tokens=2))
+    eng.run_to_completion(max_steps=8)
+    assert eng.fabric_stats.prefill_bursts == 0
+    assert eng.fabric_stats.flushes == 2
+    assert eng.fabric_stats.network_calls == 2
 
 
 def test_engine_serve_fsdp_streams_weights_bit_identically():
@@ -182,5 +200,6 @@ def test_engine_serve_fsdp_streams_weights_bit_identically():
     gen, stats = serve(cfg)
     gen_fsdp, stats_fsdp = serve(dataclasses.replace(cfg, serve_fsdp=True))
     assert gen == gen_fsdp
-    assert stats_fsdp.network_calls == stats.network_calls == 2
+    # 1 prefill write burst per admission wave + 1 read + 1 write per step
+    assert stats_fsdp.network_calls == stats.network_calls == 3
     assert stats_fsdp.streams_served > stats.streams_served

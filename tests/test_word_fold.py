@@ -94,7 +94,9 @@ def test_fold_kernel_pack_matrix_bit_identical(fold, pack, kernels):
 def test_fold_resolution_degrades_gracefully():
     """auto folds the widest the dtype/geometry allow: bf16 pairs → u32
     without x64 (quads need the u64 lane); a stream odd in both width and
-    groups pins its whole dtype group at fold 1; pad layout never folds."""
+    groups pins its whole dtype group at fold 1; the pad layout folds on
+    its padded width (including the padding, which rides the wider lanes
+    too — that's what isolates packing from lane width in the A/B)."""
     n = 4
     even = {"a": _stream(0, n, 2, 8, jnp.bfloat16),
             "b": _stream(1, n, 4, 3, jnp.bfloat16)}   # odd width, even groups
@@ -119,7 +121,16 @@ def test_fold_resolution_degrades_gracefully():
     for name, x in even.items():
         sched.enqueue_read(name, x)
     sched.flush()
-    assert sched.stats.words_folded == 0              # pad layout never folds
+    # pad folds the padded lane view (w_max=8 divides 2): half the
+    # moved+padded elements ride inside u32 machine words
+    lane_view = sched.stats.words_moved + sched.stats.words_padded
+    assert sched.stats.words_folded == lane_view // 2
+
+    sched = BurstScheduler(Fabric.make(n, "oracle", pack="pad"), word_fold=1)
+    for name, x in even.items():
+        sched.enqueue_read(name, x)
+    sched.flush()
+    assert sched.stats.words_folded == 0              # fold=1: raw baseline
 
 
 def test_word_fold_validates():
