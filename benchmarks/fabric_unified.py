@@ -27,6 +27,24 @@ The perf claims measured, on the same 4-stream mixed-width traffic:
   isolates the kernel effect on the op census) plus a ``_fold2_kernel``
   combination cell.
 
+Paged-decode cell family (``decode_*``): one KV pool leaf's end-to-end
+decode-step movement — read the pool through the network, reconstruct the
+dense per-slot view through the page table, scatter the (round-tripped)
+update back, write network home — at low (25%) and high (75%) pool
+occupancy:
+
+* ``decode_gather_after_occ{25,75}`` — the fallback contract: the burst
+  banks EVERY pool frame, the gather is a consumer-side postprocess on the
+  network's output (``words_moved`` = pool frames, occupancy-independent);
+* ``decode_fused_occ{25,75}`` — the fused contract
+  (``FabricConfig.fused_gather``): sparse-extent streams bank only the
+  frames the table maps (``words_moved`` = ``words_live`` ∝ occupancy);
+  the medusa ``_kernel`` variants lower the indirection + exchange as one
+  Pallas launch with the indices prefetched (vLLM paged-attention style).
+
+Both forms are asserted bit-identical — same dense view, same updated pool
+— before timing, which is the acceptance bar for the fused-gather contract.
+
 We lower every form over the same traffic and compare total HLO ops, gather
 census, CPU wall time, and the scheduler word census (moved / padded /
 folded / fused-kernel bursts), for the medusa and crossbar fabrics.
@@ -108,6 +126,124 @@ def _word_census(impl: str, pack: str, fold, args) -> SchedulerStats:
     _enqueue_all(sched, *args)
     sched.flush()
     return stats
+
+
+def _paged_workload(occ_pages: int):
+    """One pool-backed KV leaf at a controlled occupancy: ``B`` slots each
+    holding ``occ_pages`` of their ``pages_per_slot`` logical pages."""
+    from repro.models import common as cm
+
+    b, t_depth, ps = 8, 64, 8
+    pages_per_slot = t_depth // ps
+    pool_pages = b * pages_per_slot
+    frames = pool_pages * ps
+    pool = jax.random.normal(jax.random.PRNGKey(3), (frames, N, D),
+                             jnp.bfloat16)
+    table = np.full((b, pages_per_slot), -1, np.int32)
+    nxt = 0
+    for s in range(b):
+        table[s, :occ_pages] = np.arange(nxt, nxt + occ_pages)
+        nxt += occ_pages
+    live_idx, expand, dense_pos = cm.page_live_plan(table, ps, t_depth, N)
+    phys = cm.page_gather_indices(jnp.asarray(table), ps, t_depth)
+    return pool, phys, (jnp.asarray(live_idx), jnp.asarray(expand),
+                        jnp.asarray(dense_pos))
+
+
+def _paged_fns(impl: str, fused: bool):
+    """The decode step's per-leaf KV movement: read burst → dense per-slot
+    view → scatter the update back → write burst.  ``fused`` selects the
+    sparse-extent contract (network moves live frames) vs gather-after
+    (network moves the pool)."""
+    from repro.models import common as cm
+
+    fab = Fabric.make(N, impl)
+
+    def gather_after(pool, phys):
+        sched = BurstScheduler(fab)
+        sched.enqueue_read("kv", pool)
+        banked = sched.flush()["kv"]
+        pm = cm.banked_to_port_major(banked, (pool.shape[0],))
+        dense = cm.gather_pool_frames(pm, phys, pm.ndim - 2)
+        back = cm.scatter_pool_frames(pm, dense, phys, pm.ndim - 2)
+        sched = BurstScheduler(fab)
+        sched.enqueue_write("kv_w", cm.port_major_to_banked(back))
+        return dense, sched.flush()["kv_w"]
+
+    def fused_fn(pool, plan):
+        live_idx, expand, dense_pos = plan
+        sched = BurstScheduler(fab)
+        sched.enqueue_read("kv", pool, gather=live_idx)
+        banked = sched.flush()["kv"]
+        pm = cm.banked_to_port_major(banked, (live_idx.shape[0],))
+        dense = cm.gather_pool_frames(pm, expand, pm.ndim - 2)
+        flat = dense.reshape(dense.shape[:-3]
+                             + (dense.shape[-3] * dense.shape[-2],)
+                             + dense.shape[-1:])
+        compact = cm.gather_pool_frames(flat, dense_pos, flat.ndim - 2)
+        sched = BurstScheduler(fab)
+        sched.enqueue_write("kv_w", cm.port_major_to_banked(compact),
+                            scatter=live_idx, into=pool)
+        return dense, sched.flush()["kv_w"]
+
+    return jax.jit(fused_fn) if fused else jax.jit(gather_after)
+
+
+def _paged_census(impl: str, fused: bool, pool, phys, plan) -> SchedulerStats:
+    """Traffic census matching the timed cell: one read AND one write burst
+    (the decode step's two directions), so words_moved is what the timed
+    function actually carried."""
+    stats = SchedulerStats()
+    sched = BurstScheduler(Fabric.make(N, impl), stats=stats)
+    if fused:
+        k = plan[0].shape[0]
+        sched.enqueue_read("kv", pool, gather=plan[0])
+        sched.enqueue_write("kv_w", jnp.zeros((k // N, N, N, D), pool.dtype),
+                            scatter=plan[0], into=pool)
+    else:
+        sched.enqueue_read("kv", pool)
+        sched.enqueue_write(
+            "kv_w", jnp.zeros((pool.shape[0] // N, N, N, D), pool.dtype))
+    sched.flush()
+    return stats
+
+
+def paged_decode_cells(cells: dict, rows: list) -> None:
+    """The ``decode_fused`` vs ``decode_gather_after`` A/B at low/high pool
+    occupancy (see module docstring).  Asserts bit-parity of the dense view
+    and the written-back pool before timing."""
+    for occ_pages, tag in ((2, "occ25"), (6, "occ75")):
+        pool, phys, plan = _paged_workload(occ_pages)
+        for impl in ("medusa", "crossbar"):
+            kops.use_kernels(False)
+            ref_dense, ref_pool = _paged_fns(impl, fused=False)(pool, phys)
+            variants = [(f"decode_gather_after_{tag}", False, False),
+                        (f"decode_fused_{tag}", True, False)]
+            if impl == "medusa":
+                variants.append((f"decode_fused_{tag}_kernel", True, True))
+            for name, fused, kern in variants:
+                kops.use_kernels(kern)
+                fn = _paged_fns(impl, fused)
+                arg = plan if fused else phys
+                dense, pool_back = fn(pool, arg)
+                assert np.array_equal(np.asarray(dense, np.float32),
+                                      np.asarray(ref_dense, np.float32)), (
+                    impl, name)
+                assert np.array_equal(np.asarray(pool_back, np.float32),
+                                      np.asarray(ref_pool, np.float32)), (
+                    impl, name)
+                stats = _paged_census(impl, fused, pool, phys, plan)
+                cell = {"us": time_us(fn, pool, arg, iters=30),
+                        "words_moved": stats.words_moved,
+                        "words_live": stats.words_live,
+                        "gather_fused_bursts": stats.gather_fused_bursts,
+                        "kernel_bursts": stats.kernel_bursts}
+                cells[f"{impl}/{name}"] = cell
+                for key, val in cell.items():
+                    rows.append((f"fabric_unified/{impl}/{name}/{key}",
+                                 val if key == "us" else None,
+                                 "" if key == "us" else val))
+    kops.use_kernels(False)
 
 
 def _git_sha() -> str:
@@ -225,6 +361,7 @@ def run(packs=("packed", "pad"), folds=(1, 2)) -> list:
                     rows.append((f"fabric_unified/{impl}/{name}/{key}",
                                  val if key == "us" else None,
                                  "" if key == "us" else val))
+        paged_decode_cells(cells, rows)
     finally:
         kops.use_kernels(kernels_before)
 
@@ -249,6 +386,12 @@ def run(packs=("packed", "pad"), folds=(1, 2)) -> list:
     if m and mk:
         print(f"# medusa fused-kernel burst HLO ops: "
               f"{mk['total_hlo_ops']} (unrolled {m['total_hlo_ops']})")
+    ga = cells.get("medusa/decode_gather_after_occ25")
+    fu = cells.get("medusa/decode_fused_occ25")
+    if ga and fu:
+        print(f"# medusa paged decode @25% occupancy: fused "
+              f"{fu['us']:.0f}us / {fu['words_moved']} words vs "
+              f"gather-after {ga['us']:.0f}us / {ga['words_moved']} words")
     return rows
 
 

@@ -29,14 +29,27 @@ class PortSpec:
     so a stream occupies ``words`` contiguous word lanes starting at
     ``offset`` within its dtype group's ``[N, N, W_total]`` tile — the
     framework form of the paper's per-port head/tail pointers.  The extents
-    are recorded at enqueue time regardless of ``FabricConfig.pack``; only
-    the ``"packed"`` layout slices by them.
+    are recorded at enqueue time regardless of ``FabricConfig.pack`` and
+    describe the burst that packs every enqueued stream of the dtype; when
+    the kernelized fabric peels sparse-extent streams into their own fused
+    launches, the scheduler re-derives the dense remainder's offsets over
+    the streams actually packed (the enqueue-time values remain the
+    observability record, not the slicing authority).
+
+    ``gathered``/``pool_words`` are the sparse-extent mode (the head/tail
+    pointers generalized to a scatter list): a gathered stream names its
+    lines by an explicit frame-index operand into a larger backing region
+    (a paged KV pool), so the burst carries only ``words`` live words while
+    ``pool_words`` records the backing extent the indices address — the
+    traffic the gather-after-burst fallback would have moved instead.
     """
     name: str
     direction: str = "read"       # read | write
     lanes: int = 1                # W_acc multiplier for this stream
     offset: int = 0               # word-axis offset within the packed burst
     words: int = 0                # word-axis extent (0 = not yet scheduled)
+    gathered: bool = False        # sparse extent: lines named by an index list
+    pool_words: int = 0           # backing extent the gather indices address
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +93,16 @@ class FabricConfig:
     sequences share HBM); ``False`` keeps the dense per-slot reservation
     (``[max_slots, t_max]`` regions, the A/B baseline and the bit-parity
     reference).
+
+    ``fused_gather`` selects where the pool's logical→physical gather
+    happens relative to the networks: ``"auto"``/``True`` makes it part of
+    the fabric contract (sparse-extent streams — the burst carries only the
+    frames the page table maps, ``words_moved`` scales with live tokens;
+    on the kernelized medusa fabric the indices ride the fused burst kernel
+    as a prefetched operand, vLLM paged-attention style), ``False`` keeps
+    the gather as a consumer-side postprocess on the banked full pool (the
+    gather-after-burst fallback — the network moves every pool frame).
+    ``"auto"`` (default) follows ``paged_pool``.
     """
     n_ports: int = 8
     lane_width: int = 64
@@ -90,11 +113,20 @@ class FabricConfig:
     pack: str = "packed"          # packed | pad
     word_fold: "str | int" = "auto"   # auto | 1 | 2 | 4
     paged_pool: bool = True       # serving engine: shared physical page pool
+    fused_gather: "str | bool" = "auto"   # auto | True | False
 
     @property
     def line_width(self) -> int:
         """W_line: elements per DRAM line."""
         return self.n_ports * self.lane_width
+
+    @property
+    def fused_gather_on(self) -> bool:
+        """Whether the paged gather/scatter is part of the fabric contract
+        (sparse-extent bursts) rather than a consumer-side postprocess."""
+        if self.fused_gather == "auto":
+            return self.paged_pool
+        return bool(self.fused_gather)
 
     def validate(self) -> "FabricConfig":
         if self.impl not in ("medusa", "crossbar", "oracle", "fused"):
@@ -104,6 +136,9 @@ class FabricConfig:
         if self.word_fold not in ("auto", 1, 2, 4):
             raise ValueError(f"word_fold must be 'auto', 1, 2 or 4, "
                              f"got {self.word_fold!r}")
+        if self.fused_gather not in ("auto", True, False):
+            raise ValueError(f"fused_gather must be 'auto', True or False, "
+                             f"got {self.fused_gather!r}")
         if self.n_ports < 1 or self.lane_width < 1:
             raise ValueError(f"bad fabric geometry N={self.n_ports} "
                              f"W_acc={self.lane_width}")

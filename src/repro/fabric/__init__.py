@@ -12,9 +12,11 @@ than per-consumer plumbing:
   step, the framework form of the paper's §III-C burst buffering.  Streams
   pack along the word axis (each :class:`PortSpec` records its
   ``(offset, words)`` extent — the per-port head/tail pointers — and the
-  network moves zero padding), and ``issue()``/``commit()`` split the
-  transfer into the §III-C input/output double buffer so it overlaps
-  consumer compute;
+  network moves zero padding), sparse-extent streams fuse the paged pool's
+  logical→physical gather into the burst itself (``gather=``/``scatter=``
+  index operands; the network banks live frames, not the pool), and
+  ``issue()``/``commit()`` split the transfer into the §III-C input/output
+  double buffer so it overlaps consumer compute;
 * :class:`PagedKVCache` — the serving engine's KV storage as fixed-size
   pages over the fabric's banked layout: a shared physical page pool
   (:class:`PagePool` — free-list allocation, per-slot logical→physical

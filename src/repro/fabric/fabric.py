@@ -125,23 +125,73 @@ class Fabric:
         return (self.burst_kernelized
                 and not jnp.issubdtype(jnp.dtype(dtype), jnp.complexfloating))
 
-    def read_burst(self, burst: jax.Array) -> jax.Array:
+    def read_burst(self, burst: jax.Array,
+                   indices: "jax.Array | None" = None) -> jax.Array:
         """One packed ``[N, N, W]`` read-burst tile (N lines of N machine
         words, W payload lanes — every queued stream of a dtype, word-packed
         by the scheduler) → banked ``[N, N, W]``.  On the medusa fabric with
         kernels enabled this is ONE fused ``pallas_call`` (word-tiled grid);
-        otherwise the per-stage network of :meth:`read` on the single tile."""
+        otherwise the per-stage network of :meth:`read` on the single tile.
+
+        With ``indices`` the burst is a **sparse-extent** transfer (the
+        fused page-table gather): ``burst`` is a full pool line stream
+        ``[L, N, W]`` and ``indices [K]`` (K a multiple of N; entries
+        ``>= L`` are sentinels reading as zero frames) names the live
+        frames — the network banks only those, returning ``[K//N, N, N,
+        W]``.  Kernelized, the indices ride the launch as a prefetched
+        operand (indirection + exchange in one kernel, no materialized
+        full-pool intermediate); unrolled, the gather lowers as a take
+        feeding the per-stage network.  Either way the network's traffic is
+        ``K`` frames — live tokens, not pool capacity."""
+        n = self.config.n_ports
+        if indices is not None:
+            if burst.ndim != 3 or burst.shape[1] != n:
+                raise ValueError(f"sparse read wants pool lines [L, N, W] "
+                                 f"for N={n}, got {burst.shape}")
+            if indices.shape[0] % n:
+                raise ValueError(f"gather index count {indices.shape[0]} "
+                                 f"must be a multiple of N={n}")
+            if self.burst_kernelized_for(burst.dtype):
+                return kops.burst_gather_read(burst, indices, n)
+            taken = jnp.take(burst, indices, axis=0, mode="fill",
+                             fill_value=0)
+            return self.read(taken)
         self._check_burst(burst)
         if self.burst_kernelized_for(burst.dtype):
-            return kops.burst_read(burst, self.config.n_ports)
+            return kops.burst_read(burst, n)
         return self.read(burst)[0]
 
-    def write_burst(self, banked: jax.Array) -> jax.Array:
+    def write_burst(self, banked: jax.Array,
+                    indices: "jax.Array | None" = None,
+                    into: "jax.Array | None" = None) -> jax.Array:
         """Write direction of :meth:`read_burst`: one banked ``[N, N, W]``
-        tile → the ``[N, N, W]`` line tile headed back to DRAM."""
+        tile → the ``[N, N, W]`` line tile headed back to DRAM.
+
+        With ``indices`` (and ``into``, the pool line stream ``[L, N, W]``
+        being written) this is the sparse-extent scatter: ``banked`` is
+        ``[G, N, N, W]`` of live frames, the write network reassembles their
+        lines, and each lands at its indexed pool row (sentinels drop; rows
+        the indices never touch keep their frames without moving — the
+        kernelized form is one input-output-aliased launch).  Returns the
+        updated pool stream."""
+        n = self.config.n_ports
+        if indices is not None:
+            if into is None:
+                raise ValueError("sparse write_burst needs the pool stream "
+                                 "to scatter into (into=)")
+            if banked.ndim != 4 or banked.shape[1] != n or banked.shape[2] != n:
+                raise ValueError(f"sparse write wants banked [G, N, N, W] "
+                                 f"for N={n}, got {banked.shape}")
+            if indices.shape[0] != banked.shape[0] * n:
+                raise ValueError(f"scatter index count {indices.shape[0]} "
+                                 f"!= banked line count {banked.shape[0] * n}")
+            if self.burst_kernelized_for(banked.dtype):
+                return kops.burst_scatter_write(banked, indices, into, n)
+            lines = self.write(banked)
+            return into.at[indices].set(lines, mode="drop")
         self._check_burst(banked)
         if self.burst_kernelized_for(banked.dtype):
-            return kops.burst_write(banked, self.config.n_ports)
+            return kops.burst_write(banked, n)
         return self.write(banked[None])
 
     def _check_burst(self, tile: jax.Array) -> None:

@@ -27,10 +27,17 @@ admitted prompt's page-aligned KV extents as ``prefill/*`` write streams on
 one :class:`repro.fabric.BurstScheduler` flush — the per-stream
 ``(offset, words)`` extents are exactly the page extents — so a wave of
 admissions is **one write-network call per dtype** instead of per-layer
-splices (``prefill_bursts``).  Slots whose extents miss the network
-geometry (lines not a multiple of N, or a non-bankable fabric) fall back to
-the per-layer splice (``prefill_splices``); the write network is an exact
-round trip, so both installs are bit-identical.
+splices (``prefill_bursts``).  Under the fused-gather contract
+(``fused_gather=True`` — ``FabricConfig.fused_gather``) the wave lowers as
+**sparse-extent writes**: one scatter-indexed stream per paged leaf lands
+every prompt's frames directly at their physical page rows through
+``Fabric.write_burst(..., indices=, into=)`` (the indices ride the fused
+burst kernel prefetched when kernels are enabled), replacing the host-side
+page splice and widening burst eligibility to odd spans (sentinel pad rows
+drop for free).  Otherwise slots whose extents miss the network geometry
+(lines not a multiple of N, or a non-bankable fabric) fall back to the
+per-layer splice (``prefill_splices``); the write network is an exact
+round trip, so all installs are bit-identical.
 
 Only full-depth attention leaves (``k``/``v`` with a ``t_max`` time axis —
 the entries named by ``paged_entries``) are paged.  Ring (sliding-window)
@@ -57,7 +64,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.fabric.fabric import pm_to_banked
-from repro.fabric.scheduler import BurstScheduler, SchedulerStats
+from repro.fabric.scheduler import (FRAME_SENTINEL as _SENTINEL,
+                                    BurstScheduler, SchedulerStats)
 
 
 @dataclasses.dataclass
@@ -192,9 +200,11 @@ class PagedKVCache:
     """
 
     def __init__(self, caches, max_slots: int, t_max: int, page_size: int,
-                 pool_pages: int = 0, paged_entries=(), fabric=None):
+                 pool_pages: int = 0, paged_entries=(), fabric=None,
+                 fused_gather: bool = False):
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.fused_gather = fused_gather
         self.caches = caches
         self.max_slots = max_slots
         self.t_max = t_max
@@ -345,9 +355,83 @@ class PagedKVCache:
                 return False
         return True
 
+    def _fused_eligible(self) -> bool:
+        """Whether the fused-gather install can carry this pool's admission:
+        a bankable fabric on the port-per-KV-head geometry.  Per-slot span
+        alignment no longer matters — sparse writes pad odd spans with
+        sentinel rows (dropped on scatter), so slots the banked install had
+        to splice now ride the burst too."""
+        if self.fabric is None or not self.fabric.banks_kv:
+            return False
+        n = self.fabric.n_ports
+        return all(self.caches[kind][i]["k"].shape[-2] == n
+                   for kind, i in self.paged_entries)
+
+    def _pool_install_fused(self, plans, stats=None) -> None:
+        """Fused-contract install: each paged leaf takes the whole wave as
+        ONE sparse-extent write stream — the write network reassembles every
+        admitted prompt's frames and the scatter lands each at its physical
+        page row (``Fabric.write_burst(..., indices=, into=)``; the indices
+        ride the fused burst kernel prefetched when kernels are enabled).
+        Still one flush and one network call per dtype per wave, and the
+        scatter replaces the host-side ``_install_pool_leaf`` postprocess."""
+        n = self.fabric.n_ports
+        ps = self.table.page_size
+        staged: Dict[Tuple[str, int, str], Tuple[list, list]] = {}
+        for slot, req_cache, span in plans:
+            if span == 0:
+                continue
+            row = self.pool.table[slot]
+            t = np.arange(span)
+            pf = (row[t // ps].astype(np.int64) * ps + t % ps).astype(np.int32)
+            for kind, i in self.paged_entries:
+                pool_leaf = self.caches[kind][i]["k"]
+                frames_n = pool_leaf.shape[-4] * pool_leaf.shape[-3]
+                reps = int(np.prod(pool_leaf.shape[:-4])) \
+                    if pool_leaf.ndim > 4 else 1
+                idx = (np.arange(reps, dtype=np.int64)[:, None] * frames_n
+                       + pf[None, :]).reshape(-1).astype(np.int32)
+                for name in ("k", "v"):
+                    fr = self._req_frames(req_cache, kind, i, name, span)
+                    lines = fr.reshape(-1, n, fr.shape[-1])
+                    lns, idxs = staged.setdefault((kind, i, name), ([], []))
+                    lns.append(lines)
+                    idxs.append(idx)
+        if staged:
+            sched = BurstScheduler(self.fabric, stats=stats)
+            targets = {}
+            for (kind, i, name), (lns, idxs) in staged.items():
+                lines = (lns[0] if len(lns) == 1
+                         else jnp.concatenate(lns, axis=0))
+                idx = np.concatenate(idxs)
+                pad = (-lines.shape[0]) % n
+                if pad:
+                    lines = jnp.pad(lines, ((0, pad), (0, 0), (0, 0)))
+                    idx = np.concatenate(
+                        [idx, np.full((pad,), _SENTINEL, np.int32)])
+                pool_leaf = self.caches[kind][i][name]
+                into = _flat_frames_lines(pool_leaf)
+                tag = f"prefill/{kind}{i}/{name}"
+                sched.enqueue_write(tag, _lines_to_banked(lines, n),
+                                    scatter=jnp.asarray(idx), into=into)
+                targets[tag] = (kind, i, name, pool_leaf.shape)
+            out = sched.flush()
+            for tag, (kind, i, name, shape) in targets.items():
+                self._set_leaf(kind, i, name, out[tag].reshape(shape))
+            self.prefill_bursts += 1
+            if stats is not None:
+                stats.prefill_bursts += 1
+        for slot, req_cache, _ in plans:
+            self._splice_unpaged(slot, req_cache)
+
     def _pool_install(self, plans, stats=None, burst=None) -> None:
-        """Install a wave into the shared pool: burst-eligible slots ride
-        one write-network flush, the rest splice per leaf."""
+        """Install a wave into the shared pool: under the fused-gather
+        contract the whole wave is sparse-extent write traffic
+        (:meth:`_pool_install_fused`); otherwise burst-eligible slots ride
+        one write-network flush and the rest splice per leaf."""
+        if self.fused_gather and burst is not False and self._fused_eligible():
+            self._pool_install_fused(plans, stats=stats)
+            return
         n = self.fabric.n_ports if self.fabric is not None else 0
         # burst=False forces the splice; True/None burst wherever the slot's
         # extents fit the network geometry (a forced True cannot override it)
@@ -424,6 +508,18 @@ def _lines_to_banked(lines: jax.Array, n: int) -> jax.Array:
     identity — the accelerator side holds port-major head streams and the
     write network reassembles the wide DRAM lines)."""
     return pm_to_banked(jnp.swapaxes(lines, 0, 1), n)    # [N, L, D] streams
+
+
+def _flat_frames_lines(pool_leaf: jax.Array) -> jax.Array:
+    """Pool leaf ``[lead..., n_pages, page_size, Hkv, D]`` → its flattened
+    line stream ``[lead*F, Hkv, D]`` (the sparse scatter's target).  Must
+    stay the composition ``kv_leaf_to_lines(_flat_frames(leaf))`` that the
+    decode step uses (``models/lm.py``) — admission's scatter rows and the
+    decode bursts address the same line ordering; the pair lives model-side
+    and fabric sits below models, hence this mirror."""
+    flat = pool_leaf.reshape(pool_leaf.shape[:-4] + (-1,)
+                             + pool_leaf.shape[-2:])
+    return flat.reshape((-1,) + flat.shape[-2:])
 
 
 def _install_pool_leaf(pool_leaf: jax.Array, frames: jax.Array,

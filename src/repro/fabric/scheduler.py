@@ -64,11 +64,31 @@ transfer genuinely overlaps consumer compute, which is the paper's
 input/output double buffer expressed once for every consumer.  ``flush()``
 remains as ``issue(); commit()`` for synchronous callers.
 
+Sparse-extent streams (the fused page-table gather)
+---------------------------------------------------
+A paged KV pool's consumer only needs the frames its page table maps, so a
+stream may be enqueued with an explicit frame-index operand:
+``enqueue_read(..., gather=idx)`` names the live lines of a larger backing
+stream (sentinel entries — indices past the backing extent — read as zero
+frames), and ``enqueue_write(..., scatter=idx, into=pool_lines)`` lands the
+moved lines back at their indexed pool rows (sentinels drop, untouched rows
+never move).  The burst then carries ``len(idx)`` frames instead of the
+pool's — decode traffic scales with live tokens, not pool capacity.  On the
+unrolled path the gather lowers as a take feeding the shared packed burst
+(still one network call per dtype, the indexed lines packed next to the
+dense streams); on the kernelized medusa fabric each sparse stream lowers
+through the fused gather/scatter burst kernel with the indices as a
+scalar-prefetched operand (one launch per stream — indirection + exchange
+fused, no materialized full-pool intermediate).  Both lowerings are
+bit-identical to the gather-after-burst form by construction (the networks
+are pure word movement, and take commutes with them).
+
 ``stats`` distinguishes ``flushes`` (issue/commit cycles) from
 ``network_calls`` (one per direction and dtype present in a burst) and
 counts moved vs padded word-axis elements, which is exactly the contrast
 ``benchmarks/fabric_unified.py`` measures against per-consumer
-:class:`Fabric` calls.
+:class:`Fabric` calls.  ``words_live``/``gather_fused_bursts`` single out
+the sparse-extent traffic (see :class:`SchedulerStats`).
 """
 
 from __future__ import annotations
@@ -106,6 +126,16 @@ class SchedulerStats:
     installed through one shared write burst (``prefill/*`` streams — see
     :meth:`repro.fabric.PagedKVCache.admit_wave`) instead of per-layer
     splices.
+
+    ``words_live`` counts the word-axis elements carried for sparse-extent
+    (gather/scatter-indexed) streams — the fused page-table contract's
+    traffic, which scales with live frames; a fused decode step shows
+    ``words_live > 0`` where the gather-after-burst fallback moves the
+    whole pool as ordinary ``words_moved`` with ``words_live == 0``.
+    ``gather_fused_bursts`` counts the network calls that carried at least
+    one sparse-extent stream (on the kernelized path, the fused
+    gather/scatter launches themselves) — the printed census can now tell
+    fused from fallback decode.
     """
     streams_served: int = 0
     flushes: int = 0
@@ -113,7 +143,9 @@ class SchedulerStats:
     words_moved: int = 0
     words_padded: int = 0
     words_folded: int = 0
+    words_live: int = 0
     kernel_bursts: int = 0
+    gather_fused_bursts: int = 0
     prefill_bursts: int = 0
 
     @property
@@ -128,6 +160,16 @@ class _Queued:
     rest_shape: Tuple[int, ...]
     width: int                    # prod(rest) — payload elements per word
     groups: int                   # line groups (L // N, resp. G)
+    # sparse extent (fused page-table gather): reads carry `gather` frame
+    # indices into the payload's line axis; writes carry `scatter` target
+    # rows plus the pool stream `into` they land in
+    gather: Optional[jax.Array] = None
+    scatter: Optional[jax.Array] = None
+    into: Optional[jax.Array] = None
+
+    @property
+    def sparse(self) -> bool:
+        return self.gather is not None or self.scatter is not None
 
 
 class BurstScheduler:
@@ -169,10 +211,19 @@ class BurstScheduler:
         return sum(q.spec.words for q in queue
                    if jnp.dtype(q.payload.dtype) == dtype)
 
-    def enqueue_read(self, name: str, lines: jax.Array) -> PortSpec:
+    def enqueue_read(self, name: str, lines: jax.Array,
+                     gather: Optional[jax.Array] = None) -> PortSpec:
         """Queue a line stream ``[L, N, *rest]`` (L a multiple of N) for the
         read network.  Returns the :class:`PortSpec` keying the result, with
-        the stream's packed-burst ``(offset, words)`` extent filled in."""
+        the stream's packed-burst ``(offset, words)`` extent filled in.
+
+        ``gather`` makes the stream sparse-extent (the fused page-table
+        gather): ``lines`` is the full backing pool and ``gather [K]``
+        (K a multiple of N; entries ``>= L`` are sentinels reading as zero
+        frames) names the live lines — the burst carries only those, and the
+        result is the banked ``[K//N, N, N, *rest]`` of the addressed
+        frames.  The spec's ``words`` is the live extent; ``pool_words``
+        records what the gather-after-burst fallback would have moved."""
         n = self.fabric.n_ports
         if lines.ndim < 2 or lines.shape[1] != n or lines.shape[0] % n:
             raise ValueError(
@@ -180,29 +231,68 @@ class BurstScheduler:
                 f"got {lines.shape}")
         self._check_name(name)
         rest = tuple(lines.shape[2:])
-        groups = lines.shape[0] // n
-        words = groups * _prod(rest)
+        width = _prod(rest)
+        if gather is not None:
+            if gather.ndim != 1 or gather.shape[0] % n:
+                raise ValueError(
+                    f"stream {name!r}: gather indices must be [k*N] for "
+                    f"N={n}, got {gather.shape}")
+            groups = gather.shape[0] // n
+        else:
+            groups = lines.shape[0] // n
+        words = groups * width
         spec = PortSpec(
             name=name, direction="read", words=words,
-            offset=self._extent(self._reads, jnp.dtype(lines.dtype)))
-        self._reads.append(_Queued(spec, lines, rest, _prod(rest), groups))
+            offset=self._extent(self._reads, jnp.dtype(lines.dtype)),
+            gathered=gather is not None,
+            pool_words=(lines.shape[0] // n) * width if gather is not None
+            else 0)
+        self._reads.append(_Queued(spec, lines, rest, width, groups,
+                                   gather=gather))
         return spec
 
-    def enqueue_write(self, name: str, banked: jax.Array) -> PortSpec:
-        """Queue a banked buffer ``[G, N, N, *rest]`` for the write network."""
+    def enqueue_write(self, name: str, banked: jax.Array,
+                      scatter: Optional[jax.Array] = None,
+                      into: Optional[jax.Array] = None) -> PortSpec:
+        """Queue a banked buffer ``[G, N, N, *rest]`` for the write network.
+
+        ``scatter``/``into`` make the stream sparse-extent: the write
+        network reassembles the banked frames' lines and each lands at its
+        indexed row of the pool stream ``into [L, N, *rest]`` (sentinel
+        indices ``>= L`` drop — padding rows are free; rows the indices
+        never touch keep their frames without moving).  The committed
+        result is the updated pool stream."""
         n = self.fabric.n_ports
         if banked.ndim < 3 or banked.shape[1] != n or banked.shape[2] != n:
             raise ValueError(
                 f"stream {name!r}: want [G, N, N, ...] banked for N={n}, "
                 f"got {banked.shape}")
         self._check_name(name)
+        if (scatter is None) != (into is None):
+            raise ValueError(
+                f"stream {name!r}: sparse writes need both scatter indices "
+                f"and the pool stream to land in (into=)")
         rest = tuple(banked.shape[3:])
-        words = banked.shape[0] * _prod(rest)
+        width = _prod(rest)
+        if scatter is not None:
+            if scatter.ndim != 1 or scatter.shape[0] != banked.shape[0] * n:
+                raise ValueError(
+                    f"stream {name!r}: scatter indices {scatter.shape} must "
+                    f"match the banked line count {banked.shape[0] * n}")
+            if into.shape[1:] != banked.shape[2:] or into.ndim != banked.ndim - 1:
+                raise ValueError(
+                    f"stream {name!r}: scatter target {into.shape} does not "
+                    f"match banked lines {banked.shape}")
+        words = banked.shape[0] * width
         spec = PortSpec(
             name=name, direction="write", words=words,
-            offset=self._extent(self._writes, jnp.dtype(banked.dtype)))
-        self._writes.append(_Queued(spec, banked, rest, _prod(rest),
-                                    banked.shape[0]))
+            offset=self._extent(self._writes, jnp.dtype(banked.dtype)),
+            gathered=scatter is not None,
+            pool_words=(into.shape[0] // n) * width if scatter is not None
+            else 0)
+        self._writes.append(_Queued(spec, banked, rest, width,
+                                    banked.shape[0], scatter=scatter,
+                                    into=into))
         return spec
 
     # -- the issue/commit pipeline ---------------------------------------------
@@ -239,35 +329,121 @@ class BurstScheduler:
     def _run_direction(self, queue: List[_Queued],
                        read: bool) -> Dict[str, jax.Array]:
         out: Dict[str, jax.Array] = {}
+        n = self.fabric.n_ports
         by_dtype: Dict[object, List[_Queued]] = {}
         for q in queue:
             by_dtype.setdefault(jnp.dtype(q.payload.dtype), []).append(q)
-        for streams in by_dtype.values():
+        for dtype, streams in by_dtype.items():
             self.stats.streams_served += len(streams)
+            sparse = [q for q in streams if q.sparse]
+            for q in sparse:
+                self.stats.words_live += q.groups * n * n * q.width
+            if sparse and self.fabric.burst_kernelized_for(dtype):
+                # fused lowering: each sparse stream is one gather/scatter
+                # burst kernel launch (indices ride as a prefetched operand
+                # — indirection + exchange in one kernel); dense streams of
+                # the dtype still share one packed burst
+                for q in sparse:
+                    out[q.spec.name] = self._run_sparse_kernel(q, read)
+                streams = [q for q in streams if not q.sparse]
+                if not streams:
+                    continue
+            elif sparse:
+                # unrolled lowering: gathers become takes feeding the shared
+                # burst (the network still runs once per dtype, on live
+                # frames only); scatters land after the network returns
+                self.stats.gather_fused_bursts += 1
+                streams = [self._materialize_gather(q) for q in streams]
             self.stats.network_calls += 1
             if self.pack == "packed":
-                out.update(self._run_packed(streams, read))
+                res = self._run_packed(streams, read)
             else:
-                out.update(self._run_padded(streams, read))
+                res = self._run_padded(streams, read)
+            for q in streams:
+                if q.scatter is not None:
+                    res[q.spec.name] = q.into.at[q.scatter].set(
+                        res[q.spec.name], mode="drop")
+            out.update(res)
         return out
 
-    def _group_fold(self, streams: List[_Queued]) -> int:
-        """The machine-word fold factor for one dtype group: the largest
-        ``f ≤ word_fold`` for which a ``f``-words-wide machine word exists
-        (u64 needs x64) and every member stream's geometry divides — ``f``
-        must divide the per-group word count (fold within the line group) or
-        the group count (fold across groups).  1 = no folding."""
+    def _materialize_gather(self, q: _Queued) -> _Queued:
+        """Unrolled-path form of a sparse read: the frame gather lowers as a
+        take (sentinels fill zero frames) whose result joins the shared
+        burst like any dense stream.  Non-gather streams pass through."""
+        if q.gather is None:
+            return q
+        taken = jnp.take(q.payload, q.gather, axis=0, mode="fill",
+                         fill_value=0)
+        return dataclasses.replace(q, payload=taken, gather=None)
+
+    def _sparse_fold(self, q: _Queued) -> int:
+        """Fold factor for one sparse-extent stream on the kernel path:
+        within-line only (the index operand addresses whole frames, so the
+        fold must divide the frame's word count)."""
+        return self._fold_factor(q.payload.dtype, lambda f: q.width % f == 0)
+
+    def _run_sparse_kernel(self, q: _Queued, read: bool) -> jax.Array:
+        """One sparse-extent stream through the fused gather/scatter burst
+        kernel: the pool stream (and, for writes, the scatter target) is
+        viewed as machine words, the indices ride the launch prefetched,
+        and only the live frames move."""
+        n = self.fabric.n_ports
+        fold = self._sparse_fold(q)
+        elems = q.groups * n * n * q.width
+        self.stats.network_calls += 1
+        self.stats.kernel_bursts += 1
+        self.stats.gather_fused_bursts += 1
+        self.stats.words_moved += elems
+        self.stats.words_folded += elems - elems // fold
+        wide = (machine_word_dtype(
+            jnp.dtype(q.payload.dtype).itemsize * fold) if fold > 1 else None)
+
+        def view(x, lead_ndim):
+            flat = x.reshape(x.shape[:lead_ndim] + (q.width,))
+            if fold == 1:
+                return _int_view(flat)
+            return jax.lax.bitcast_convert_type(
+                flat.reshape(flat.shape[:-1] + (q.width // fold, fold)), wide)
+
+        if read:
+            lines = view(q.payload, 2)                     # [L, N, w/f]
+            banked = self.fabric.read_burst(lines, indices=q.gather)
+            out = (_un_view(banked, q.payload.dtype) if fold == 1
+                   else _unfold_view(banked, q.payload.dtype))
+            return out.reshape((q.groups, n, n) + q.rest_shape)
+        banked = view(q.payload, 3)                        # [G, N, N, w/f]
+        into = view(q.into, 2)                             # [L, N, w/f]
+        moved = self.fabric.write_burst(banked, indices=q.scatter, into=into)
+        out = (_un_view(moved, q.payload.dtype) if fold == 1
+               else _unfold_view(moved, q.payload.dtype))
+        return out.reshape(q.into.shape)
+
+    def _fold_factor(self, dtype, supports) -> int:
+        """The one fold-policy choke point: the largest ``f ≤ word_fold``
+        for which an ``f``-words-wide machine word exists (u64 needs x64)
+        and the caller's geometry predicate ``supports(f)`` holds; 1 = no
+        folding (bool/complex payloads never fold — bitcast rejects them).
+        The packed, pad and sparse-kernel paths differ only in the
+        predicate."""
         cap = 4 if self.word_fold == "auto" else int(self.word_fold)
-        dt = jnp.dtype(streams[0].payload.dtype)
+        dt = jnp.dtype(dtype)
         if (cap == 1 or jnp.issubdtype(dt, jnp.bool_)
                 or jnp.issubdtype(dt, jnp.complexfloating)):
             return 1
         for f in (4, 2):
             if (f <= cap and machine_word_dtype(dt.itemsize * f) is not None
-                    and all(q.width % f == 0 or q.groups % f == 0
-                            for q in streams)):
+                    and supports(f)):
                 return f
         return 1
+
+    def _group_fold(self, streams: List[_Queued]) -> int:
+        """Fold factor for one packed dtype group: every member stream's
+        geometry must divide — ``f`` divides the per-group word count (fold
+        within the line group) or the group count (fold across groups)."""
+        return self._fold_factor(
+            streams[0].payload.dtype,
+            lambda f: all(q.width % f == 0 or q.groups % f == 0
+                          for q in streams))
 
     def _run_packed(self, streams: List[_Queued],
                     read: bool) -> Dict[str, jax.Array]:
@@ -303,28 +479,24 @@ class BurstScheduler:
         if self.fabric.burst_kernelized_for(burst.dtype):
             self.stats.kernel_bursts += 1
         out: Dict[str, jax.Array] = {}
+        # extents recomputed over the streams actually packed: when the
+        # kernelized sparse streams peel off into their own fused launches,
+        # the dense remainder's enqueue-time offsets no longer describe this
+        # burst (for an unpeeled group they coincide with the spec extents)
+        off = 0
         for q in streams:
-            piece = moved[:, :, q.spec.offset // fold:
-                          (q.spec.offset + q.spec.words) // fold]
+            piece = moved[:, :, off // fold: (off + q.spec.words) // fold]
+            off += q.spec.words
             out[q.spec.name] = _unpack_tile(piece, q, n, read, fold)
         return out
 
     def _padded_fold(self, streams: List[_Queued], w_max: int) -> int:
-        """Machine-word fold factor for one pad-layout dtype group: every
-        stream is padded to ``w_max`` words, so the factor just has to
-        divide ``w_max`` (and the wider machine word must exist).  1 = no
-        folding — and at 1 the pad path keeps its raw payload dtype, so the
+        """Fold factor for one pad-layout dtype group: every stream is
+        padded to ``w_max`` words, so the factor just has to divide
+        ``w_max``.  At 1 the pad path keeps its raw payload dtype, so the
         PR 1 baseline measurement is unchanged."""
-        cap = 4 if self.word_fold == "auto" else int(self.word_fold)
-        dt = jnp.dtype(streams[0].payload.dtype)
-        if (cap == 1 or jnp.issubdtype(dt, jnp.bool_)
-                or jnp.issubdtype(dt, jnp.complexfloating)):
-            return 1
-        for f in (4, 2):
-            if (f <= cap and machine_word_dtype(dt.itemsize * f) is not None
-                    and w_max % f == 0):
-                return f
-        return 1
+        return self._fold_factor(streams[0].payload.dtype,
+                                 lambda f: w_max % f == 0)
 
     def _run_padded(self, streams: List[_Queued],
                     read: bool) -> Dict[str, jax.Array]:
@@ -372,6 +544,13 @@ class BurstScheduler:
             piece = piece[..., :q.width]
             out[q.spec.name] = piece.reshape(piece.shape[:-1] + q.rest_shape)
         return out
+
+
+# Sparse-extent sentinel: any index >= the backing stream's line count reads
+# as a zero frame (take mode="fill") and drops on scatter (mode="drop").
+# Producers (engine live plans, admission, tests) and consumers (kernels,
+# fabric, scheduler) share this one value so it stays >= every pool's lines.
+FRAME_SENTINEL = 2 ** 30
 
 
 _WORD_VIEW = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}

@@ -34,6 +34,7 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.transpose import _bit_flip_both, _swap_mask
 
@@ -128,16 +129,27 @@ def read_network_tiles(lines: jax.Array, n_ports: int,
     )(x)
 
 
-def _pick_word_tile(w: int, cap: int = 4096) -> int:
+def _pick_word_tile(w: int, cap: int = 4096, divisor: bool = False) -> int:
     """Word-tile for a burst of ``w`` lanes: the whole burst when it fits,
     else the largest divisor of ``w`` in (cap/2, cap] (one clean grid), else
     the evenest split at the same grid depth — ``ceil(w / ceil(w/cap))``
-    pads at most ``grid-1`` lanes total instead of up to ``cap-1``."""
+    pads at most ``grid-1`` lanes total instead of up to ``cap-1``.
+
+    ``divisor=True`` is the gather-operand mode: the tile must DIVIDE ``w``
+    so the index operand tiles cleanly with the word grid.  The gather and
+    scatter burst kernels address whole frames through a prefetched index
+    list; a padded edge tile would read (and, on the aliased scatter, write)
+    past the frame's word extent at an indexed row — so instead of the pad
+    fallback the search widens to the largest divisor ≤ cap (worst case 1
+    for a prime ``w``; pick lane counts that factor, on hardware multiples
+    of 128)."""
     if w <= cap:
         return w
     for t in range(cap, cap // 2, -1):
         if w % t == 0:
             return t
+    if divisor:
+        return max(t for t in range(1, cap // 2 + 1) if w % t == 0)
     grid = -(-w // cap)
     return -(-w // grid)
 
@@ -201,3 +213,164 @@ def burst_network_tiles(tile: jax.Array, n_ports: int, word_tile: int = 0,
         interpret=interpret,
     )(x, *masks)
     return out[:, :, :w] if pad else out
+
+
+# ----------------------------------------------------------------------------
+# fused page-table gather/scatter bursts (sparse-extent streams)
+# ----------------------------------------------------------------------------
+#
+# The paged KV pool names its live frames through a logical→physical table;
+# these kernels make that indirection part of the transposition unit itself
+# (vLLM paged-attention style): the frame-index list rides the launch as a
+# *scalar-prefetched* operand, the BlockSpec index maps dereference it, and
+# the network banks ONLY the addressed frames — one launch that does
+# indirection + exchange, with no materialized full-pool intermediate and
+# traffic proportional to live tokens instead of pool capacity.  Sentinel
+# indices (>= the pool's line count) gather as zero frames on the read side
+# and drop on the (input-output-aliased) write side, so index lists pad to
+# the N-line group granularity for free.  The index contract is
+# non-negative-or-sentinel: entries must lie in [0, L) or at/above L — a
+# negative entry is undefined (the unrolled take/scatter would wrap it
+# NumPy-style while the kernel's block clamp would not), and every producer
+# (``page_live_plan`` asserts the table's mapped-prefix invariant,
+# admission maps only allocated pages, ``page_gather_indices`` rewrites
+# unmapped rows to the sentinel) guarantees it by construction.
+
+def _exchange_with_masks(tile: jax.Array, mask_refs) -> jax.Array:
+    """The burst kernel's exchange network on one ``[N, N, tw]`` tile, stage
+    mux patterns supplied as operands (a Pallas body cannot capture array
+    constants)."""
+    for level, m_ref in enumerate(mask_refs):
+        tile = jnp.where(m_ref[...], _bit_flip_both(tile, 0, 1, level), tile)
+    return tile
+
+
+def _gather_burst_kernel(n: int, n_lines: int, *refs):
+    # grid (G, Wt, N): steps r = 0..N-1 of a (group, word-tile) pair gather
+    # one addressed frame each into the scratch tile; the last step runs the
+    # exchange network on the assembled [N, N, tw] tile and banks it.
+    idx_ref, x_ref, o_ref, scratch = refs[0], refs[1], refs[-2], refs[-1]
+    g, r = pl.program_id(0), pl.program_id(2)
+    valid = idx_ref[g * n + r] < n_lines
+    scratch[r, :, :] = jnp.where(valid, x_ref[0], jnp.zeros_like(x_ref[0]))
+
+    @pl.when(r == n - 1)
+    def _():
+        o_ref[0] = _exchange_with_masks(scratch[...], refs[2:-2])
+
+
+@functools.partial(jax.jit, static_argnames=("n_ports", "word_tile",
+                                             "interpret"))
+def gather_burst_network_tiles(lines: jax.Array, idx: jax.Array,
+                               n_ports: int, word_tile: int = 0,
+                               interpret: bool = True) -> jax.Array:
+    """Fused gather + read network: pool line stream ``lines [L, N, W]`` and
+    frame indices ``idx [K]`` (``K`` a multiple of N; entries ``>= L`` are
+    sentinels) → banked ``[K//N, N, N, W]`` holding exactly the addressed
+    frames, zeros at sentinels.  The index list is a scalar-prefetched
+    operand: each grid step's input block is ``lines[idx[...]]`` — the
+    indirection happens in the BlockSpec index map, so only live frames move
+    through VMEM and the exchange stages.  Equivalent to
+    ``take(lines, idx, fill=0)`` followed by :func:`burst_network_tiles`
+    groupwise, as one launch."""
+    n = n_ports
+    l, n_words, w = lines.shape
+    k = idx.shape[0]
+    if n_words != n or k % n:
+        raise ValueError(f"bad gather burst: lines {lines.shape}, "
+                         f"idx {idx.shape} for N={n}")
+    tw = word_tile or _pick_word_tile(w, divisor=True)
+    if w % tw:
+        raise ValueError(
+            f"gather word_tile={tw} must divide the frame word count {w} "
+            f"(the index operand must tile with the word grid)")
+    groups = k // n
+    masks = _stage_masks(n)
+    idx = idx.astype(jnp.int32)
+    clamped = lambda g, wt, r, idx_ref: (
+        jnp.minimum(idx_ref[g * n + r], l - 1), 0, wt)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(groups, w // tw, n),
+        in_specs=[pl.BlockSpec((1, n, tw), clamped)]
+                 + [pl.BlockSpec((n, n, 1), lambda g, wt, r, idx_ref:
+                    (0, 0, 0))] * len(masks),
+        out_specs=pl.BlockSpec((1, n, n, tw),
+                               lambda g, wt, r, idx_ref: (g, 0, 0, wt)),
+        scratch_shapes=[pltpu.VMEM((n, n, tw), lines.dtype)],
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_burst_kernel, n, l),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((groups, n, n, w), lines.dtype),
+        interpret=interpret,
+    )(idx, lines, *masks)
+
+
+def _scatter_burst_kernel(n: int, n_lines: int, *refs):
+    # grid (G, Wt, N): each step exchanges its group tile (the involution —
+    # the write direction of the same network) and lands line r at the
+    # addressed pool row; sentinel rows read-modify-write THE OUTPUT block
+    # back unchanged (o_ref starts as the aliased pool and reflects earlier
+    # grid steps' writes, so a sentinel clamped onto a row another entry
+    # already landed on cannot resurrect the stale frame — the separate
+    # dest operand exists only to carry the input-output alias).  The
+    # exchange recomputes per line — log2(N) selects on a VMEM-resident
+    # tile, cheap next to the DMA — which keeps the kernel scratch-free in
+    # the aliased-output direction.
+    idx_ref, x_ref, o_ref = refs[0], refs[1], refs[-1]
+    g, r = pl.program_id(0), pl.program_id(2)
+    valid = idx_ref[g * n + r] < n_lines
+    tile = _exchange_with_masks(x_ref[0], refs[2:-2])
+    o_ref[0] = jnp.where(valid, tile[r], o_ref[0])
+
+
+@functools.partial(jax.jit, static_argnames=("n_ports", "word_tile",
+                                             "interpret"))
+def scatter_burst_network_tiles(banked: jax.Array, idx: jax.Array,
+                                into: jax.Array, n_ports: int,
+                                word_tile: int = 0,
+                                interpret: bool = True) -> jax.Array:
+    """Fused write network + scatter: banked ``[G, N, N, W]`` → line frames
+    scattered into the pool stream ``into [L, N, W]`` at rows ``idx [G*N]``
+    (sentinel entries ``>= L`` drop).  ``into`` aliases the output, so rows
+    the indices never touch keep their frames without moving — the write
+    traffic is the live frames only.  Grid steps are sequential (each
+    revisited destination row is read-modify-written in order); on real
+    hardware the sentinel clamp would need a reserved row to keep the
+    pipeline hazard-free — interpret mode, the validated path, is exact."""
+    n = n_ports
+    g_count, n0, n1, w = banked.shape
+    l = into.shape[0]
+    if n0 != n or n1 != n or idx.shape[0] != g_count * n:
+        raise ValueError(f"bad scatter burst: banked {banked.shape}, "
+                         f"idx {idx.shape} for N={n}")
+    if into.shape[1] != n or into.shape[2] != w:
+        raise ValueError(f"scatter target {into.shape} does not match "
+                         f"banked frames [{n}, {w}]")
+    tw = word_tile or _pick_word_tile(w, divisor=True)
+    if w % tw:
+        raise ValueError(
+            f"scatter word_tile={tw} must divide the frame word count {w} "
+            f"(the index operand must tile with the word grid)")
+    masks = _stage_masks(n)
+    idx = idx.astype(jnp.int32)
+    clamped = lambda g, wt, r, idx_ref: (
+        jnp.minimum(idx_ref[g * n + r], l - 1), 0, wt)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(g_count, w // tw, n),
+        in_specs=[pl.BlockSpec((1, n, n, tw),
+                               lambda g, wt, r, idx_ref: (g, 0, 0, wt))]
+                 + [pl.BlockSpec((n, n, 1), lambda g, wt, r, idx_ref:
+                    (0, 0, 0))] * len(masks)
+                 + [pl.BlockSpec((1, n, tw), clamped)],
+        out_specs=pl.BlockSpec((1, n, tw), clamped),
+    )
+    return pl.pallas_call(
+        functools.partial(_scatter_burst_kernel, n, l),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(into.shape, into.dtype),
+        input_output_aliases={2 + len(masks): 0},
+        interpret=interpret,
+    )(idx, banked, *masks, into)

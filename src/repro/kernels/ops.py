@@ -22,8 +22,10 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.medusa_transpose import (burst_network_tiles,
+                                            gather_burst_network_tiles,
                                             medusa_transpose_tiles,
-                                            read_network_tiles)
+                                            read_network_tiles,
+                                            scatter_burst_network_tiles)
 from repro.kernels.rotator import barrel_rotate_groups
 from repro.kernels.stream_matmul import stream_matmul
 
@@ -96,6 +98,33 @@ def burst_write(banked: jax.Array, n_ports: int) -> jax.Array:
         from repro.core.transpose import write_network_oracle
         return write_network_oracle(banked[None], n_ports)
     return burst_network_tiles(banked, n_ports)
+
+
+def burst_gather_read(lines: jax.Array, idx: jax.Array,
+                      n_ports: int) -> jax.Array:
+    """Fused page-table gather + read network: pool lines ``[L, N, W]`` and
+    frame indices ``idx [K]`` (sentinels ``>= L`` read as zero frames) →
+    banked ``[K//N, N, N, W]`` of exactly the addressed frames, one launch
+    with the indices as a scalar-prefetched operand (vLLM paged-attention
+    style — the network moves live frames, not the pool)."""
+    if not _USE_KERNELS:
+        from repro.core.transpose import read_network_oracle
+        taken = jnp.take(lines, idx, axis=0, mode="fill", fill_value=0)
+        return read_network_oracle(taken, n_ports)
+    return gather_burst_network_tiles(lines, idx, n_ports)
+
+
+def burst_scatter_write(banked: jax.Array, idx: jax.Array, into: jax.Array,
+                        n_ports: int) -> jax.Array:
+    """Fused write network + page-table scatter: banked ``[G, N, N, W]`` →
+    frames landed at rows ``idx [G*N]`` of the pool stream ``into [L, N, W]``
+    (sentinels drop; untouched rows keep their frames without moving), one
+    input-output-aliased launch."""
+    if not _USE_KERNELS:
+        from repro.core.transpose import write_network_oracle
+        lines = write_network_oracle(banked, n_ports)
+        return into.at[idx].set(lines, mode="drop")
+    return scatter_burst_network_tiles(banked, idx, into, n_ports)
 
 
 def rotate_groups(x: jax.Array, amounts: jax.Array) -> jax.Array:

@@ -53,6 +53,14 @@ def main():
     ap.add_argument("--pool-pages", type=int, default=0,
                     help="physical pages in the shared pool (0 = the dense "
                          "reservation's worth: max_slots * pages_per_slot)")
+    ap.add_argument("--fused-gather", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="fuse the pool's logical->physical gather into the "
+                         "burst contract: the networks move only the frames "
+                         "the page table maps (default: FabricConfig."
+                         "fused_gather, auto-on with the pool); "
+                         "--no-fused-gather keeps the gather-after-burst "
+                         "fallback that banks the whole pool")
     ap.add_argument("--engine", action="store_true",
                     help="serve through the paged continuous-batching engine")
     ap.add_argument("--pack", default=None, choices=[None, "packed", "pad"],
@@ -92,6 +100,10 @@ def main():
         cfg = dataclasses.replace(
             cfg, fabric=dataclasses.replace(cfg.resolved_fabric,
                                             paged_pool=args.paged_pool))
+    if args.fused_gather is not None:
+        cfg = dataclasses.replace(
+            cfg, fabric=dataclasses.replace(cfg.resolved_fabric,
+                                            fused_gather=args.fused_gather))
     fab = cfg.resolved_fabric
 
     data = SyntheticLM(cfg, batch=args.batch,
@@ -142,6 +154,14 @@ def main():
                   f"{fs.words_folded} folded into machine words, "
                   f"{fs.kernel_bursts} fused-kernel bursts, "
                   f"{fs.prefill_bursts} prefill bursts)")
+            if fs.gather_fused_bursts:
+                print(f"fused gather: {fs.words_live} live-frame words "
+                      f"through {fs.gather_fused_bursts} sparse-extent "
+                      f"bursts (decode traffic scales with live tokens, "
+                      f"not pool capacity)")
+            elif eng.paged:
+                print("fused gather: off — gather-after-burst fallback "
+                      "banks the whole pool each step")
         else:
             print("fabric: decode step unscheduled (geometry fallback)")
         print("sample:", reqs[0].generated[:16])

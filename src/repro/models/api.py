@@ -84,19 +84,23 @@ def init_cache(cfg: ModelConfig, batch: int, t_max: int,
 
 
 def decode_fn(params, token, caches, pos, cfg: ModelConfig, sched=None,
-              page_table=None, page_size: int = 0, t_depth: int = 0):
+              page_table=None, page_size: int = 0, t_depth: int = 0,
+              live_plan=None):
     """One decode step.  ``sched`` (a :class:`repro.fabric.BurstScheduler`)
     routes the step's KV banking — and ``serve_fsdp`` weight streaming —
     through one read and one write network burst (decoder-only families).
     ``page_table`` (+ static ``page_size``/``t_depth``) switches the
     full-attention leaves to the shared physical page pool with
-    gather-based decode (``FabricConfig.paged_pool``)."""
+    gather-based decode (``FabricConfig.paged_pool``); ``live_plan`` (the
+    operands from :func:`repro.models.common.page_live_plan`) fuses the
+    pool gather into the burst contract so the networks move only live
+    frames (``FabricConfig.fused_gather``)."""
     if cfg.family == "audio":
         assert page_table is None, "paged pool covers decoder-only families"
         return whisper.decode_step(params, token, caches, pos, cfg)
     return lm.decode_step(params, token, caches, pos, cfg, sched=sched,
                           page_table=page_table, page_size=page_size,
-                          t_depth=t_depth)
+                          t_depth=t_depth, live_plan=live_plan)
 
 
 def greedy_generate(params, prompt, cfg: ModelConfig, steps: int,

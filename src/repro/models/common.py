@@ -14,8 +14,10 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.fabric.fabric import Fabric, pm_to_banked
+from repro.fabric.scheduler import FRAME_SENTINEL as _SENTINEL
 from repro.parallel.sharding import shard
 
 
@@ -302,13 +304,26 @@ def port_major_to_banked(pm: jax.Array) -> jax.Array:
 # Under ``FabricConfig.paged_pool`` the serving engine backs every
 # full-attention leaf with one shared ``[n_pages, page_size, Hkv, D]``
 # physical region; a per-slot logical→physical page table indirects each
-# slot's time axis into it.  The decode step takes the table as an operand
-# and *gathers* each slot's mapped frames — in port-major space when the
-# step is burst-scheduled, so the gather composes with the banked layout
-# the shared read burst already produced (the burst moves the pool's F
-# frames once; the gather is a relabel on the network's output).  Every
-# valid position gathers exactly the frame the dense layout would hold, so
-# logits are bit-identical to the dense engine.
+# slot's time axis into it.  Two decode forms exist:
+#
+# * **Fused gather** (``FabricConfig.fused_gather``, the default under the
+#   pool): the logical→physical indirection is part of the fabric contract.
+#   The engine plans the step's live frames host-side
+#   (:func:`page_live_plan`) and the scheduler's sparse-extent streams bank
+#   ONLY those — the network's traffic scales with live tokens, not pool
+#   capacity — with :func:`gather_pool_frames` reduced to the cheap
+#   compact→dense relabel on the (live-sized) banked output.
+# * **Gather-after-burst** (the fallback): the burst banks the pool's F
+#   frames once and the decode step takes the table as an operand,
+#   gathering each slot's mapped frames from the network's output in
+#   port-major space.
+#
+# Every valid position gathers exactly the frame the dense layout would
+# hold either way, so logits are bit-identical to the dense engine.
+
+# unmapped-frame sentinel: gathers fill zeros, scatters drop (the shared
+# sparse-extent value — repro.fabric.scheduler.FRAME_SENTINEL)
+
 
 def page_gather_indices(page_table: jax.Array, page_size: int,
                         t_depth: int) -> jax.Array:
@@ -319,15 +334,90 @@ def page_gather_indices(page_table: jax.Array, page_size: int,
     decode position mask), scatters drop them."""
     t = jnp.arange(t_depth, dtype=jnp.int32)
     pt = page_table[:, t // page_size]                       # [B, T]
-    return jnp.where(pt < 0, jnp.int32(2 ** 30),
+    return jnp.where(pt < 0, jnp.int32(_SENTINEL),
                      pt * jnp.int32(page_size) + t % page_size)
+
+
+def page_live_plan(page_table, page_size: int, t_depth: int, n_ports: int,
+                   bucket: int = 0):
+    """Host-side plan of a step's live frames for the fused-gather decode.
+
+    ``page_table`` is the host ``int32 [S, pages_per_slot]`` table (``-1``
+    unmapped; a slot's mapped logical pages are a prefix — the pool
+    allocates them in order).  Returns three ``int32`` numpy arrays:
+
+    * ``live_idx [L_pad]`` — the physical frame index of every live frame,
+      slot-major in logical order, sentinel-padded to a multiple of
+      ``n_ports`` (then of ``bucket``, to bound retrace churn — padding
+      frames gather as zeros and scatter as drops, so they cost only lanes);
+    * ``expand [S, t_depth]`` — each dense position's index into the
+      compact live list (sentinel where unmapped), i.e. the cheap
+      compact→dense relabel applied to the network's live-sized output;
+    * ``dense_pos [L_pad]`` — each live frame's flattened dense position
+      ``s * t_depth + t`` (the inverse of ``expand`` on the live set),
+      used to compact the updated dense view before the write scatter.
+
+    A slot's live extent is ``min(mapped_pages * page_size, t_depth)`` —
+    the tail of a partially-used last page is live (it backs upcoming
+    decode growth), but frames past the dense depth are not addressable
+    and never move."""
+    table = np.asarray(page_table)
+    s_count = table.shape[0]
+    mapped = (table >= 0).sum(axis=1)
+    # the mapped-prefix invariant underwrites the whole plan (and the
+    # sparse-extent index contract: entries are physical frames or the
+    # sentinel, never negative) — a hole inside a row would emit -1-derived
+    # frame indices, so fail loudly here rather than corrupt a gather
+    if not np.array_equal(table >= 0,
+                          np.arange(table.shape[1])[None, :] < mapped[:, None]):
+        raise ValueError("page table rows must map a logical-page prefix "
+                         "(-1 entries only after the mapped pages)")
+    live = np.minimum(mapped * page_size, t_depth)
+    unit = max(n_ports, 1)
+    l_pad = -(-max(int(live.sum()), 1) // unit) * unit
+    if bucket:
+        l_pad = -(-l_pad // bucket) * bucket
+    live_idx = np.full((l_pad,), _SENTINEL, np.int32)
+    expand = np.full((s_count, t_depth), _SENTINEL, np.int32)
+    dense_pos = np.full((l_pad,), _SENTINEL, np.int32)
+    off = 0
+    for s in range(s_count):
+        m = int(live[s])
+        if not m:
+            continue
+        t = np.arange(m)
+        live_idx[off:off + m] = (table[s, t // page_size] * page_size
+                                 + t % page_size)
+        expand[s, :m] = off + t
+        dense_pos[off:off + m] = s * t_depth + t
+        off += m
+    return live_idx, expand, dense_pos
+
+
+def pool_rep_indices(idx: jax.Array, reps: int, frames: int) -> jax.Array:
+    """Tile per-pool frame indices ``idx [K]`` over a leaf's leading layer
+    axis: rep ``r``'s pool occupies lines ``[r*frames, (r+1)*frames)`` of
+    the flattened line stream, so valid entries shift by ``r*frames`` and
+    sentinels stay sentinels.  Returns ``[reps*K]``."""
+    offs = jnp.arange(reps, dtype=jnp.int32)[:, None] * jnp.int32(frames)
+    tiled = jnp.broadcast_to(idx[None, :], (reps, idx.shape[0]))
+    return jnp.where(tiled < frames, tiled + offs,
+                     jnp.int32(_SENTINEL)).reshape(-1)
 
 
 def gather_pool_frames(pool_flat: jax.Array, phys: jax.Array,
                        axis: int) -> jax.Array:
-    """Gather per-slot frames from a pool's flattened frame axis ``F`` at
-    ``axis``: ``phys [B, T]`` replaces that axis with ``[B, T]`` in the
-    result.  Out-of-range (unmapped) indices read as zeros."""
+    """Gather per-slot frames from a flattened frame axis at ``axis``:
+    ``phys`` (any shape; sentinel/out-of-range = zeros) replaces that axis
+    with its own shape in the result.
+
+    This is the thin consumer-side dispatch over the fused-gather contract:
+    under ``FabricConfig.fused_gather`` the pool-sized indirection happens
+    inside ``Fabric.read_burst(..., indices=)`` (the network banks only
+    live frames) and this helper only relabels the live-sized output
+    (``expand`` from :func:`page_live_plan`); on the fallback it is the
+    full logical→physical gather over the banked pool
+    (:func:`page_gather_indices`)."""
     return jnp.take(pool_flat, phys, axis=axis, mode="fill", fill_value=0)
 
 
@@ -336,7 +426,10 @@ def scatter_pool_frames(pool_flat: jax.Array, dense: jax.Array,
     """Inverse of :func:`gather_pool_frames`: write the per-slot dense
     frames (``[B, T]`` at ``axis``) back to their mapped physical frames;
     unmapped positions drop.  Mapped frames are owned by exactly one slot
-    (the pool's free list never double-maps), so the scatter is exact."""
+    (the pool's free list never double-maps), so the scatter is exact.
+    Under the fused contract the pool-sized form of this lives in
+    ``Fabric.write_burst(..., indices=, into=)`` (the gather-after-burst
+    fallback is the only remaining pool-sized caller)."""
     idx = [slice(None)] * pool_flat.ndim
     idx[axis] = phys.reshape(-1)
     upd = dense.reshape(dense.shape[:axis] + (-1,) + dense.shape[axis + 2:])

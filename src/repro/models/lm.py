@@ -318,7 +318,8 @@ def forward(params, tokens, cfg: ModelConfig, *, patch_embeds=None,
 
 
 def decode_step(params, token, caches, pos, cfg: ModelConfig, sched=None,
-                page_table=None, page_size: int = 0, t_depth: int = 0):
+                page_table=None, page_size: int = 0, t_depth: int = 0,
+                live_plan=None):
     """One serving decode step: ``token [B, 1]`` + caches at ``pos`` →
     (logits [B, 1, V], new caches).  KV caches are read through the Medusa
     port-major layout engine (cfg.kv_layout).
@@ -343,15 +344,25 @@ def decode_step(params, token, caches, pos, cfg: ModelConfig, sched=None,
     write burst.  Bit-identical to the dense layout: every valid position
     gathers exactly the frame the dense cache would hold.  ``page_size``
     and ``t_depth`` (the dense time depth the gather reconstructs) are
-    static step parameters."""
+    static step parameters.
+
+    With ``live_plan`` (the ``(live_idx, expand, dense_pos)`` operands from
+    :func:`repro.models.common.page_live_plan` — ``FabricConfig.
+    fused_gather``), the logical→physical gather is fused into the burst
+    contract instead: the scheduler's sparse-extent streams bank ONLY the
+    live frames the table maps (indices prefetched into the fused burst
+    kernel on the kernelized medusa fabric), so the network's traffic
+    scales with live tokens rather than pool capacity — bit-identical to
+    both the gather-after-burst form and the dense engine."""
     pos = jnp.asarray(pos, jnp.int32)
     positions = pos[None] if pos.ndim == 0 else pos[:, None]
     phys = (None if page_table is None
             else cm.page_gather_indices(page_table, page_size, t_depth))
     plan = _burst_plan(cfg, caches) if sched is not None else None
     if plan is not None:
+        live = live_plan if phys is not None else None
         return _decode_step_scheduled(params, token, caches, pos, positions,
-                                      cfg, sched, plan, phys=phys)
+                                      cfg, sched, plan, phys=phys, live=live)
     if phys is not None:
         return _decode_step_paged_fallback(params, token, caches, pos,
                                            positions, cfg, phys)
@@ -405,7 +416,8 @@ def _flat_frames(pool: jax.Array) -> jax.Array:
 
 
 def _decode_step_scheduled(params, token, caches, pos, positions,
-                           cfg: ModelConfig, sched, plan, phys=None):
+                           cfg: ModelConfig, sched, plan, phys=None,
+                           live=None):
     """The burst-scheduled decode step (see :func:`decode_step`).
 
     Burst 1 (read network): every planned KV leaf — and, under
@@ -418,9 +430,30 @@ def _decode_step_scheduled(params, token, caches, pos, positions,
     Under the paged pool (``phys`` — per-slot physical frame indices), the
     bursts carry the pool's F frames instead of the dense [B, t] regions;
     the per-slot gather (and the update's scatter) happens in port-major
-    space on the network's output, composing with the banked layout."""
+    space on the network's output, composing with the banked layout.
+
+    With ``live`` (the fused-gather plan — see :func:`decode_step`), the
+    gather moves INTO the bursts: each pool leaf becomes a sparse-extent
+    stream banking only its live frames, the dense [B, T] view is a cheap
+    relabel of the live-sized output, and the update compacts back through
+    the inverse map before the sparse write scatters it into the pool —
+    so both networks move ``live`` frames, not ``pool`` frames."""
     fab = cfg.resolved_fabric
     n = fab.n_ports
+    if live is not None:
+        live_idx, expand, dense_pos = live
+
+    def leaf_gather_idx(leaf):
+        """The leaf's sparse read/scatter indices: the step's live frames,
+        tiled over the leaf's leading layer axis (unit leaves stack reps)."""
+        flat = _flat_frames(leaf)
+        frames = flat.shape[-3]
+        if flat.ndim == 3:                       # tail leaf: [F, N, D]
+            return live_idx
+        reps = 1
+        for s in flat.shape[:-3]:
+            reps *= s
+        return cm.pool_rep_indices(live_idx, reps, frames)
 
     # -- burst 1: weight stream + KV banking --------------------------------
     streamed = None
@@ -430,7 +463,12 @@ def _decode_step_scheduled(params, token, caches, pos, positions,
         for leaf_name in ("k", "v"):
             leaf = caches[kind][i][leaf_name]
             if phys is not None:
-                leaf = _flat_frames(leaf)
+                flat = _flat_frames(leaf)
+                sched.enqueue_read(
+                    f"{kind}{i}/{leaf_name}", cm.kv_leaf_to_lines(flat),
+                    gather=leaf_gather_idx(leaf) if live is not None
+                    else None)
+                continue
             sched.enqueue_read(f"{kind}{i}/{leaf_name}",
                                cm.kv_leaf_to_lines(leaf))
     sched.issue()
@@ -449,15 +487,24 @@ def _decode_step_scheduled(params, token, caches, pos, positions,
                     moved[f"{kind}{i}/{leaf_name}"], lead)
                 for leaf_name in ("k", "v")}
             continue
-        lead = _flat_frames(caches[kind][i]["k"]).shape[:-2]
+        flat_shape = _flat_frames(caches[kind][i]["k"]).shape
+        if live is not None:
+            # the banked output is live-sized: [lead?, Hkv, L_live, D]
+            lead = flat_shape[:-3] + (live_idx.shape[0],)
+        else:
+            lead = flat_shape[:-2]
         entry = {}
         for leaf_name in ("k", "v"):
-            # [lead?, Hkv, F, D]: the banked pool, each port's frame stream
+            # [lead?, Hkv, F|L_live, D]: each port's frame stream
             pool_pm = cm.banked_to_port_major(
                 moved[f"{kind}{i}/{leaf_name}"], lead)
-            pm_pools[(kind, i, leaf_name)] = pool_pm
-            dense_pm = cm.gather_pool_frames(pool_pm, phys,
-                                             pool_pm.ndim - 2)
+            if live is None:
+                pm_pools[(kind, i, leaf_name)] = pool_pm
+            # fused: expand relabels the compact live frames to the dense
+            # [B, T] view; fallback: full logical→physical gather
+            dense_pm = cm.gather_pool_frames(
+                pool_pm, expand if live is not None else phys,
+                pool_pm.ndim - 2)
             # [lead?, Hkv, B, T, D] → [lead?, B, Hkv, T, D]
             entry[leaf_name + "_pm"] = jnp.moveaxis(dense_pm, -3, -4)
         pm[kind][i] = entry
@@ -471,6 +518,22 @@ def _decode_step_scheduled(params, token, caches, pos, positions,
     for kind, i in plan:
         for leaf_name in ("k", "v"):
             new_pm = new_caches[kind][i][leaf_name + "_pm"]
+            if phys is not None and live is not None:
+                # compact the updated dense view back to live frames and
+                # scatter them into the pool through the sparse write burst
+                upd = jnp.moveaxis(new_pm, -4, -3)     # [lead?, Hkv, B, T, D]
+                flat = upd.reshape(upd.shape[:-3]
+                                   + (upd.shape[-3] * upd.shape[-2],)
+                                   + upd.shape[-1:])
+                compact = cm.gather_pool_frames(flat, dense_pos,
+                                                flat.ndim - 2)
+                leaf = caches[kind][i][leaf_name]
+                sched.enqueue_write(
+                    f"{kind}{i}/{leaf_name}",
+                    cm.port_major_to_banked(compact),
+                    scatter=leaf_gather_idx(leaf),
+                    into=cm.kv_leaf_to_lines(_flat_frames(leaf)))
+                continue
             if phys is not None:
                 # scatter the updated per-slot frames back into the
                 # port-major pool before it returns through the write burst

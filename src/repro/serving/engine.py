@@ -30,6 +30,16 @@ fabric's machine-word lane folding (``FabricConfig.word_fold``) and, on the
 medusa fabric with kernels enabled, lower as one fused Pallas launch per
 direction per dtype (``fabric_stats.words_folded`` / ``.kernel_bursts``).
 
+Under the **fused-gather contract** (``FabricConfig.fused_gather``, auto-on
+with the pool) the pool's logical→physical indirection moves into those
+bursts: each engine step plans its live frames host-side
+(:func:`repro.models.common.page_live_plan`, bucketed to bound retraces)
+and the KV streams become sparse-extent — the networks bank only the
+frames the page table maps, so decode traffic scales with live tokens
+instead of pool capacity (``fabric_stats.words_live`` /
+``.gather_fused_bursts``); the gather-after-burst form stays as the
+fallback (``fused_gather=False``) and the bit-parity reference.
+
 Decoder-only families (dense/moe/ssm/hybrid/vlm); greedy sampling.
 """
 
@@ -45,6 +55,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.fabric import BurstScheduler, Fabric, PagedKVCache, SchedulerStats
 from repro.models import api
+from repro.models import common as cm
 from repro.models import lm
 
 
@@ -60,7 +71,8 @@ class Request:
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, max_slots: int, t_max: int,
                  page_size: int = 0, paged_pool: Optional[bool] = None,
-                 pool_pages: int = 0, prefill_burst: Optional[bool] = None):
+                 pool_pages: int = 0, prefill_burst: Optional[bool] = None,
+                 fused_gather: Optional[bool] = None):
         assert cfg.family != "audio", "engine covers decoder-only families"
         self.cfg = cfg
         self.params = params
@@ -91,11 +103,24 @@ class ServingEngine:
         else:
             pool_pages = 0
         self.prefill_burst = prefill_burst
+        # fused page-table gather (FabricConfig.fused_gather, default on
+        # with the pool): the decode step's bursts bank only the frames the
+        # page table maps — the engine plans the live set host-side each
+        # step and passes it as operands, so network traffic scales with
+        # live tokens instead of pool capacity.  Needs a fabric that banks
+        # KV at all; the gather-after-burst form stays as the fallback.
+        self.fused = ((cfg.resolved_fabric.fused_gather_on
+                       if fused_gather is None else fused_gather)
+                      and self.paged and self.fabric.banks_kv)
+        # live-plan lengths quantize to whole page-of-lines buckets so the
+        # jitted step retraces per occupancy *bucket*, not per page
+        self.live_bucket = ps * n
         self.kv = PagedKVCache(
             api.init_cache(cfg, max_slots, self.t_alloc,
                            pool_pages=pool_pages, page_size=ps),
             max_slots, self.t_alloc, ps, pool_pages=pool_pages,
-            paged_entries=entries if self.paged else (), fabric=self.fabric)
+            paged_entries=entries if self.paged else (), fabric=self.fabric,
+            fused_gather=self.fused)
         self.pos = np.zeros((max_slots,), np.int32)      # next write position
         self.active: List[Optional[Request]] = [None] * max_slots
         self.tokens = np.zeros((max_slots, 1), np.int32)
@@ -114,7 +139,15 @@ class ServingEngine:
         # (plus one eager prefill burst per admission wave).
         self.fabric_stats = SchedulerStats()
 
-        if self.paged:
+        if self.paged and self.fused:
+            def _step(p, tok, caches, pos, page_table, live_idx, expand,
+                      dense_pos):
+                sched = BurstScheduler(self.fabric, stats=self.fabric_stats)
+                return api.decode_fn(p, tok, caches, pos, cfg, sched=sched,
+                                     page_table=page_table, page_size=ps,
+                                     t_depth=self.t_alloc,
+                                     live_plan=(live_idx, expand, dense_pos))
+        elif self.paged:
             def _step(p, tok, caches, pos, page_table):
                 sched = BurstScheduler(self.fabric, stats=self.fabric_stats)
                 return api.decode_fn(p, tok, caches, pos, cfg, sched=sched,
@@ -186,7 +219,14 @@ class ServingEngine:
             return 0
         args = (self.params, jnp.asarray(self.tokens), self.kv.caches,
                 jnp.asarray(self.pos))
-        if self.paged:
+        if self.paged and self.fused:
+            live_idx, expand, dense_pos = cm.page_live_plan(
+                self.kv.pool.table, self.page_size, self.t_alloc,
+                self.fabric.n_ports, bucket=self.live_bucket)
+            logits, new_caches = self._decode(
+                *args, self.kv.page_table_device(), jnp.asarray(live_idx),
+                jnp.asarray(expand), jnp.asarray(dense_pos))
+        elif self.paged:
             logits, new_caches = self._decode(
                 *args, self.kv.page_table_device())
         else:

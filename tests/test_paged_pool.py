@@ -209,25 +209,30 @@ def test_property_churn_parity(arrivals, page_size):
 @pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(arrivals=_ARRIVALS, page_size=st.sampled_from([1, 2, 3, 4, 5, 8, 24]),
-       undersized=st.booleans())
-def test_property_churn_parity_sweep(arrivals, page_size, undersized):
+       undersized=st.booleans(), fused=st.booleans())
+def test_property_churn_parity_sweep(arrivals, page_size, undersized, fused):
     """Long churn sweep (nightly lane): wider page-size space plus
-    undersized pools.  An undersized pool gates admission, which reorders
-    the schedule relative to the dense engine — so it is driven solo for
-    conservation/occupancy invariants (sized for one worst-case request, so
-    progress is guaranteed), while full pools keep the bit-parity bar."""
+    undersized pools, × the fused-gather contract on/off (churny page
+    tables — holes from retirement, reused pages, ``-1`` rows — through
+    both the sparse-extent bursts and the gather-after fallback).  An
+    undersized pool gates admission, which reorders the schedule relative
+    to the dense engine — so it is driven solo for conservation/occupancy
+    invariants (sized for one worst-case request, so progress is
+    guaranteed), while full pools keep the bit-parity bar."""
     ops.use_kernels(False)
     cfg = _cfg()
     if not undersized:
-        eng = _assert_bit_identical_runs(cfg, arrivals, page_size=page_size)
+        eng = _assert_bit_identical_runs(cfg, arrivals, page_size=page_size,
+                                         fused_gather=fused)
     else:
         # one worst-case request's reach (len 11 + 5 new, t_max 24)
         pool_pages = -(-16 // page_size)
         _, _, _, eng = _drive(cfg, arrivals, paged_pool=True,
                               page_size=page_size, pool_pages=pool_pages,
-                              max_steps=256)
+                              max_steps=256, fused_gather=fused)
     assert eng.kv.pool.pages_in_use == 0
     eng.kv.pool.check()
+    assert (eng.fabric_stats.gather_fused_bursts > 0) == fused
 
 
 # ---------------------------------------------------------------------------
