@@ -45,6 +45,20 @@ occupancy:
 Both forms are asserted bit-identical — same dense view, same updated pool
 — before timing, which is the acceptance bar for the fused-gather contract.
 
+Pool-sharded cell family (``decode_sharded_{1,2,4,8}dev``): the same
+read-burst → write-burst decode round trip with the pool's frame axis
+sharded over a ``pool`` device mesh axis (``FabricConfig.pool_shards``) —
+each shard fuse-gathers the frames it owns, one collective exchange hop
+delivers them to the requesting shard.  Cells record wall-clock plus the
+split of ``words_moved`` into ``words_cross_shard`` (off-diagonal exchange
+blocks that physically leave their owner, bucket padding included) vs
+``words_local`` (the diagonal): with round-robin page striping roughly
+``(S-1)/S`` of the live traffic crosses, never all of it, and every shard
+count is asserted bit-identical to the 1-device fused gather before timing.
+Host platforms re-exec these cells in a subprocess under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (device count is
+frozen at first jax import).
+
 We lower every form over the same traffic and compare total HLO ops, gather
 census, CPU wall time, and the scheduler word census (moved / padded /
 folded / fused-kernel bursts), for the medusa and crossbar fabrics.
@@ -64,10 +78,13 @@ first record.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import datetime
 import json
 import os
+import socket
 import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -246,6 +263,145 @@ def paged_decode_cells(cells: dict, rows: list) -> None:
     kops.use_kernels(False)
 
 
+SHARD_COUNTS = (1, 2, 4, 8)
+_SHARDED_MARK = "SHARDED_CELLS_JSON:"
+
+
+def _sharded_workload():
+    """Pool-backed KV leaf sized so the sharded exchange's bucket padding
+    vanishes at S=8: 4 slots x 32 live pages x 8 timesteps = 1024 live
+    frames, 16 per (owner, requestor) bucket — already a whole number of
+    N-groups, so ``cap`` needs no rounding and ``words_cross_shard`` lands
+    at exactly ``(S-1)/S`` of the live traffic.  Physical pages stripe
+    round-robin over the 8 finest shard blocks (``PagePool``'s allocation
+    order), so every power-of-two coarsening of the ownership blocks stays
+    balanced.  (Undersized buckets instead PAD the exchange — at tiny live
+    counts the ``S(S-1)·cap`` floor can exceed the live traffic itself,
+    which is the real locality tax of sharding a near-empty pool.)"""
+    from repro.models import common as cm
+
+    b, pages_per_slot, occ_pages, ps = 4, 32, 32, 8
+    pool_pages = b * pages_per_slot           # 128 — divisible by every S
+    frames = pool_pages * ps
+    blk = pool_pages // max(SHARD_COUNTS)
+    table = np.full((b, pages_per_slot), -1, np.int32)
+    for i in range(b * occ_pages):
+        s, j = divmod(i, occ_pages)
+        table[s, j] = (i % max(SHARD_COUNTS)) * blk + i // max(SHARD_COUNTS)
+    live_idx, _, _ = cm.page_live_plan(table, ps, pages_per_slot * ps, N)
+    pool = jax.random.normal(jax.random.PRNGKey(7), (frames, N, D),
+                             jnp.bfloat16)
+    return pool, jnp.asarray(live_idx), frames, ps
+
+
+def _sharded_fab(n_shards: int, collective: str = "all_to_all") -> Fabric:
+    from repro.fabric import make_pool_mesh
+
+    fab = Fabric.make(N, "medusa", pool_shards=n_shards,
+                      collective=collective)
+    if n_shards > 1:
+        fab = dataclasses.replace(fab, mesh=make_pool_mesh(n_shards))
+    return fab
+
+
+def _sharded_step(fab: Fabric, k_tot: int, stats=None):
+    """The decode round trip (sparse read burst → sparse write burst) on the
+    pool-sharded lowering — or the single-device fused gather when the
+    fabric isn't sharded (the 1dev baseline cell)."""
+    sharded = fab.config.pool_shards > 1
+
+    def step(pool, *ops):
+        sched = BurstScheduler(fab, stats=stats)
+        if sharded:
+            fetch, place = ops
+            shard = (fetch, place, k_tot)
+            sched.enqueue_read("kv", pool[None], shard=shard)
+            banked = sched.flush()["kv"]
+            sched = BurstScheduler(fab, stats=stats)
+            sched.enqueue_write("kv_w", banked, shard=shard, into=pool[None])
+            return banked, sched.flush()["kv_w"][0]
+        (live,) = ops
+        sched.enqueue_read("kv", pool, gather=live)
+        banked = sched.flush()["kv"]
+        sched = BurstScheduler(fab, stats=stats)
+        sched.enqueue_write("kv_w", banked, scatter=live, into=pool)
+        return banked, sched.flush()["kv_w"]
+
+    return step
+
+
+def _sharded_cells() -> dict:
+    """The ``decode_sharded_{S}dev`` cells; needs ``jax.device_count() >=
+    max(SHARD_COUNTS)`` (the caller re-execs under forced host devices
+    otherwise).  Asserts every shard count bit-identical to the 1-device
+    fused gather, and the locality inequality ``words_cross_shard <
+    words_moved`` at every S > 1."""
+    from repro.fabric import shard_plan
+
+    pool, live_idx, frames, ps = _sharded_workload()
+    cells, ref = {}, None
+    for s in SHARD_COUNTS:
+        if s == 1:
+            ops, k_tot = (live_idx,), int(live_idx.shape[0])
+        else:
+            plan = shard_plan(np.asarray(live_idx), frames, s, N,
+                              cap_bucket=ps)
+            ops, k_tot = plan.operands(), plan.k_tot
+        fab = _sharded_fab(s)
+        stats = SchedulerStats()
+        fn = jax.jit(_sharded_step(fab, k_tot, stats=stats))
+        banked, back = fn(pool, *ops)   # first call traces → census fills
+        got = (np.asarray(banked, np.float32), np.asarray(back, np.float32))
+        if ref is None:
+            ref = got
+        else:
+            assert np.array_equal(got[0], ref[0]), f"{s}dev banked mismatch"
+            assert np.array_equal(got[1], ref[1]), f"{s}dev pool mismatch"
+        cell = {"us": time_us(fn, pool, *ops, iters=10),
+                "pool_shards": s,
+                "words_moved": stats.words_moved,
+                "words_cross_shard": stats.words_cross_shard,
+                "words_local": stats.words_moved - stats.words_cross_shard,
+                "collective_calls": stats.collective_calls}
+        if s > 1:
+            assert cell["words_cross_shard"] < cell["words_moved"], cell
+        cells[f"medusa/decode_sharded_{s}dev"] = cell
+    return cells
+
+
+def sharded_decode_cells(cells: dict, rows: list) -> None:
+    """Collect the sharded cells, re-execing this module in a subprocess
+    with forced host devices when this process came up with too few (the
+    XLA device count is frozen at first jax import, so it cannot be raised
+    in-process)."""
+    want = max(SHARD_COUNTS)
+    if jax.device_count() >= want:
+        sub = _sharded_cells()
+    else:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                            f" --xla_force_host_platform_device_count"
+                            f"={want}").strip()
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.fabric_unified",
+             "--sharded-json"],
+            env=env, cwd=root, capture_output=True, text=True)
+        marks = [ln for ln in proc.stdout.splitlines()
+                 if ln.startswith(_SHARDED_MARK)]
+        if proc.returncode or not marks:
+            raise RuntimeError(
+                "sharded bench subprocess failed:\n"
+                + proc.stdout[-1000:] + proc.stderr[-2000:])
+        sub = json.loads(marks[-1][len(_SHARDED_MARK):])
+    for name, cell in sub.items():
+        cells[name] = cell
+        for key, val in cell.items():
+            rows.append((f"fabric_unified/{name}/{key}",
+                         val if key == "us" else None,
+                         "" if key == "us" else val))
+
+
 def _git_sha() -> str:
     try:
         return subprocess.check_output(
@@ -269,7 +425,7 @@ def _append_run(path: str, run: dict) -> None:
         if isinstance(old, dict) and isinstance(old.get("runs"), list):
             history = old["runs"]
         elif isinstance(old, dict):           # legacy flat artifact (PR 2)
-            legacy = {"git_sha": "legacy", "date": None,
+            legacy = {"git_sha": "legacy", "date": "unknown",
                       "workload": old.pop("workload", None), "cells": old}
             history = [legacy]
         else:
@@ -279,6 +435,9 @@ def _append_run(path: str, run: dict) -> None:
             os.replace(path, aside)
             print(f"# warning: {path} was not a recognized trajectory; "
                   f"moved to {aside}")
+    for rec in history:           # backfill pre-metadata records in place
+        if rec.get("date") is None:
+            rec["date"] = "unknown"
     history.append(run)
     with open(path, "w") as f:
         json.dump({"runs": history}, f, indent=2, sort_keys=True)
@@ -362,12 +521,15 @@ def run(packs=("packed", "pad"), folds=(1, 2)) -> list:
                                  val if key == "us" else None,
                                  "" if key == "us" else val))
         paged_decode_cells(cells, rows)
+        sharded_decode_cells(cells, rows)
     finally:
         kops.use_kernels(kernels_before)
 
     run_record = {
         "git_sha": _git_sha(),
         "date": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        "hostname": socket.gethostname(),
+        "jax": jax.__version__,
         "workload": {"n_ports": N, "streams": 4, "words": [D, 32, 16, 1],
                      "dtype": "bfloat16"},
         "axes": {"packs": list(packs), "folds": list(folds),
@@ -392,6 +554,16 @@ def run(packs=("packed", "pad"), folds=(1, 2)) -> list:
         print(f"# medusa paged decode @25% occupancy: fused "
               f"{fu['us']:.0f}us / {fu['words_moved']} words vs "
               f"gather-after {ga['us']:.0f}us / {ga['words_moved']} words")
+    s1 = cells.get("medusa/decode_sharded_1dev")
+    s8 = cells.get(f"medusa/decode_sharded_{max(SHARD_COUNTS)}dev")
+    if s1 and s8:
+        print(f"# sharded pool decode at {s8['pool_shards']} shards: "
+              f"{s8['words_cross_shard']} of {s8['words_moved']} words "
+              f"crossed shards "
+              f"({s8['words_cross_shard'] / s8['words_moved']:.0%}, "
+              f"{s8['words_local']} stayed local); wall {s1['us']:.0f}us "
+              f"(1dev) -> {s8['us']:.0f}us "
+              f"({s8['pool_shards']}dev, host devices)")
     return rows
 
 
@@ -403,7 +575,14 @@ if __name__ == "__main__":
                     choices=[1, 2, 4],
                     help="word_fold factors to sweep (default: 1 2, plus 4 "
                          "under x64)")
+    ap.add_argument("--sharded-json", action="store_true",
+                    help="run only the decode_sharded_* cells and print "
+                         "them as JSON (the forced-device-count subprocess "
+                         "re-exec; no BENCH_fabric.json append)")
     a = ap.parse_args()
+    if a.sharded_json:
+        print(_SHARDED_MARK + json.dumps(_sharded_cells()))
+        sys.exit(0)
     folds = tuple(a.fold) if a.fold else (
         (1, 2, 4) if jax.config.read("jax_enable_x64") else (1, 2))
     emit(run(("packed", "pad") if a.pack == "both" else (a.pack,), folds))

@@ -103,6 +103,20 @@ class FabricConfig:
     the gather as a consumer-side postprocess on the banked full pool (the
     gather-after-burst fallback — the network moves every pool frame).
     ``"auto"`` (default) follows ``paged_pool``.
+
+    ``pool_shards`` shards the physical page pool over a ``pool`` device
+    mesh axis: every full-attention leaf's page axis splits into
+    ``pool_shards`` contiguous blocks (the :func:`~repro.fabric.sharded.
+    pool_partition_spec` ``PartitionSpec``), the sparse-extent bursts lower
+    inside ``shard_map`` as a two-hop collective (local fused gather of the
+    frames each shard owns, then one all-to-all delivering them to the
+    requesting shard), and the :class:`~repro.fabric.PagePool` stripes
+    allocation round-robin across the shard blocks so decode traffic
+    balances.  ``1`` (default) keeps the single-device lowering.
+    ``collective`` picks the inter-shard exchange: ``"all_to_all"`` (XLA's
+    monolithic collective) or ``"ring"`` (N-1 ``ppermute`` rotation steps —
+    the §III-A diagonal schedule at mesh scale; see
+    ``repro.parallel.collectives``).
     """
     n_ports: int = 8
     lane_width: int = 64
@@ -114,6 +128,8 @@ class FabricConfig:
     word_fold: "str | int" = "auto"   # auto | 1 | 2 | 4
     paged_pool: bool = True       # serving engine: shared physical page pool
     fused_gather: "str | bool" = "auto"   # auto | True | False
+    pool_shards: int = 1          # pool-axis shards over the device mesh
+    collective: str = "all_to_all"    # all_to_all | ring
 
     @property
     def line_width(self) -> int:
@@ -139,6 +155,12 @@ class FabricConfig:
         if self.fused_gather not in ("auto", True, False):
             raise ValueError(f"fused_gather must be 'auto', True or False, "
                              f"got {self.fused_gather!r}")
+        if self.pool_shards < 1:
+            raise ValueError(f"pool_shards must be >= 1, "
+                             f"got {self.pool_shards}")
+        if self.collective not in ("all_to_all", "ring"):
+            raise ValueError(f"collective must be 'all_to_all' or 'ring', "
+                             f"got {self.collective!r}")
         if self.n_ports < 1 or self.lane_width < 1:
             raise ValueError(f"bad fabric geometry N={self.n_ports} "
                              f"W_acc={self.lane_width}")

@@ -51,6 +51,10 @@ class Fabric:
     """A W_line ↔ N x W_acc memory-movement fabric with selectable network."""
 
     config: FabricConfig
+    #: the jax device mesh carrying the ``pool`` axis when
+    #: ``config.pool_shards > 1`` (``repro.fabric.sharded.make_pool_mesh``);
+    #: None on the single-device fabric.
+    mesh: "object | None" = dataclasses.field(default=None, compare=False)
 
     @classmethod
     def for_model(cls, cfg) -> "Fabric":
@@ -193,6 +197,32 @@ class Fabric:
         if self.burst_kernelized_for(banked.dtype):
             return kops.burst_write(banked, n)
         return self.write(banked[None])
+
+    # -- device-mesh lowering (the sharded pool) -------------------------------
+    @property
+    def pool_sharded(self) -> bool:
+        """Whether sparse bursts lower as the two-hop collective over the
+        ``pool`` mesh axis (``config.pool_shards > 1`` and a mesh bound)."""
+        return self.config.pool_shards > 1 and self.mesh is not None
+
+    def read_burst_sharded(self, stream: jax.Array, fetch: jax.Array,
+                           place: jax.Array, k_tot: int) -> jax.Array:
+        """Sparse read burst over the pool-sharded line stream ``[R, F, N,
+        W]`` — each shard fuse-gathers its owned frames (:meth:`read_burst`
+        with the plan's ``fetch`` indices), one collective delivers them,
+        and the result is the same banked ``[k_tot//N, N, N, W]`` the
+        single-device sparse read produces, bit for bit.  The ``fetch`` /
+        ``place`` operands come from ``repro.fabric.sharded.shard_plan``."""
+        from repro.fabric import sharded as _sh
+        return _sh.sharded_read_burst(self, stream, fetch, place, k_tot)
+
+    def write_burst_sharded(self, banked: jax.Array, fetch: jax.Array,
+                            place: jax.Array, into: jax.Array) -> jax.Array:
+        """Write direction of :meth:`read_burst_sharded`: the same plan run
+        in reverse lands each banked live frame at its owning shard's pool
+        row (local fused scatter after the collective hop)."""
+        from repro.fabric import sharded as _sh
+        return _sh.sharded_write_burst(self, banked, fetch, place, into)
 
     def _check_burst(self, tile: jax.Array) -> None:
         n = self.config.n_ports

@@ -108,30 +108,59 @@ class PagePool:
     pushes a slot's pages back (true reclamation).  ``pages_allocated`` /
     ``pages_reclaimed`` are lifetime counters; ``pages_in_use`` and
     ``occupancy`` describe the pool right now.
+
+    Under the pool-sharded lowering (``n_shards > 1``) the page ids split
+    into ``n_shards`` contiguous blocks — block ``s`` lives on mesh shard
+    ``s`` (matching ``PartitionSpec("pool")`` on the leaf's page axis) —
+    and the free list becomes one stack per block with a round-robin
+    allocation cursor, so a growing sequence's pages **stripe** across
+    shards and a decode step's live-frame traffic balances instead of
+    piling onto the first block.  ``n_shards=1`` is the seed allocator
+    exactly (one stack, low ids first).
     """
 
     def __init__(self, page_size: int, n_pages: int, pages_per_slot: int,
-                 n_slots: int):
+                 n_slots: int, n_shards: int = 1):
         if page_size < 1 or n_pages < 1:
             raise ValueError(f"bad pool geometry page_size={page_size} "
                              f"n_pages={n_pages}")
+        if n_shards < 1 or n_pages % n_shards:
+            raise ValueError(
+                f"pool of {n_pages} pages cannot split into {n_shards} "
+                f"equal shard blocks")
         self.page_size = page_size
         self.n_pages = n_pages
         self.pages_per_slot = pages_per_slot
         self.n_slots = n_slots
+        self.n_shards = n_shards
         self.table = np.full((n_slots, pages_per_slot), -1, np.int32)
-        # stack: low page ids allocate first (deterministic, test-friendly)
-        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        # one stack per shard block: low page ids allocate first within each
+        # block (deterministic, test-friendly); allocation round-robins the
+        # blocks so consecutive pages of one slot land on distinct shards
+        sz = n_pages // n_shards
+        self._free_by_shard: List[List[int]] = [
+            list(range((s + 1) * sz - 1, s * sz - 1, -1))
+            for s in range(n_shards)]
+        self._rr = 0
         self.pages_allocated = 0
         self.pages_reclaimed = 0
 
+    def shard_of(self, page: int) -> int:
+        """The mesh shard owning physical page ``page`` (contiguous blocks)."""
+        return page // (self.n_pages // self.n_shards)
+
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        return sum(len(s) for s in self._free_by_shard)
+
+    @property
+    def free_pages_by_shard(self) -> Tuple[int, ...]:
+        """Free pages per shard block — the striping balance census."""
+        return tuple(len(s) for s in self._free_by_shard)
 
     @property
     def pages_in_use(self) -> int:
-        return self.n_pages - len(self._free)
+        return self.n_pages - self.free_pages
 
     @property
     def occupancy(self) -> float:
@@ -149,36 +178,66 @@ class PagePool:
         new = []
         for p in range(n_logical):
             if self.table[slot, p] < 0:
-                if not self._free:
+                phys = self._alloc_one()
+                if phys < 0:
                     raise RuntimeError(
                         f"page pool exhausted: slot {slot} needs logical page "
                         f"{p} but all {self.n_pages} physical pages are "
                         f"mapped — size the pool for the live footprint or "
                         f"admit fewer sequences")
-                phys = self._free.pop()
                 self.table[slot, p] = phys
                 self.pages_allocated += 1
                 new.append((p, phys))
         return new
 
+    def _alloc_one(self) -> int:
+        """Pop one page, round-robin over the shard blocks (skipping empty
+        ones); -1 when the whole pool is exhausted.  One shard: seed
+        stack-pop exactly."""
+        for _ in range(self.n_shards):
+            stack = self._free_by_shard[self._rr]
+            self._rr = (self._rr + 1) % self.n_shards
+            if stack:
+                return stack.pop()
+        return -1
+
     def release(self, slot: int) -> int:
-        """Return every page mapped by ``slot`` to the free list."""
+        """Return every page mapped by ``slot`` to its owning shard's free
+        stack (reversed table order, so the earliest-allocated page tops its
+        stack again — the seed LIFO order per block)."""
         phys = self.table[slot][self.table[slot] >= 0]
-        self._free.extend(int(p) for p in phys[::-1])
+        sz = self.n_pages // self.n_shards
+        for p in phys[::-1]:
+            self._free_by_shard[int(p) // sz].append(int(p))
         self.table[slot] = -1
         self.pages_reclaimed += len(phys)
         return len(phys)
 
     def check(self) -> None:
         """Free-list conservation: every physical page is exactly once in
-        the free list or the table, and the lifetime counters balance."""
+        the free lists or the table, the lifetime counters balance, and —
+        per shard — each block's free stack holds only its own pages and
+        the block's mapped + free pages are exactly its id range."""
         mapped = self.table[self.table >= 0].tolist()
         if len(mapped) != len(set(mapped)):
             raise ValueError(f"double-mapped physical pages: {sorted(mapped)}")
-        if sorted(mapped + self._free) != list(range(self.n_pages)):
+        free = [p for stack in self._free_by_shard for p in stack]
+        if sorted(mapped + free) != list(range(self.n_pages)):
             raise ValueError(
-                f"page leak: mapped={sorted(mapped)} free={sorted(self._free)}"
+                f"page leak: mapped={sorted(mapped)} free={sorted(free)}"
                 f" != range({self.n_pages})")
+        sz = self.n_pages // self.n_shards
+        for s, stack in enumerate(self._free_by_shard):
+            foreign = [p for p in stack if p // sz != s]
+            if foreign:
+                raise ValueError(
+                    f"shard {s} free stack holds foreign pages {foreign}")
+            block_mapped = [p for p in mapped if p // sz == s]
+            if sorted(block_mapped + stack) != list(range(s * sz,
+                                                          (s + 1) * sz)):
+                raise ValueError(
+                    f"shard {s} conservation broken: mapped="
+                    f"{sorted(block_mapped)} free={sorted(stack)}")
         if self.pages_allocated - self.pages_reclaimed != len(mapped):
             raise ValueError(
                 f"counter drift: allocated={self.pages_allocated} "
@@ -201,7 +260,7 @@ class PagedKVCache:
 
     def __init__(self, caches, max_slots: int, t_max: int, page_size: int,
                  pool_pages: int = 0, paged_entries=(), fabric=None,
-                 fused_gather: bool = False):
+                 fused_gather: bool = False, pool_shards: int = 1):
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         self.fused_gather = fused_gather
@@ -212,7 +271,8 @@ class PagedKVCache:
                                pages_per_slot=-(-t_max // page_size),
                                n_slots=max_slots)
         self.pool = (PagePool(page_size, pool_pages,
-                              self.table.pages_per_slot, max_slots)
+                              self.table.pages_per_slot, max_slots,
+                              n_shards=pool_shards)
                      if pool_pages else None)
         self.paged_entries = tuple(paged_entries)
         self.fabric = fabric

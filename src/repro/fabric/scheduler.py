@@ -136,6 +136,17 @@ class SchedulerStats:
     one sparse-extent stream (on the kernelized path, the fused
     gather/scatter launches themselves) — the printed census can now tell
     fused from fallback decode.
+
+    ``words_cross_shard``/``collective_calls`` single out the pool-sharded
+    lowering (``FabricConfig.pool_shards > 1``): each sharded sparse burst
+    is one ``collective_call`` (the exchange hop between the per-shard
+    fused gathers), and ``words_cross_shard`` counts the word-axis elements
+    of the exchange buffer's off-diagonal blocks — the words that
+    physically leave their owning shard, including bucket padding (the
+    collective moves whole padded buckets; the diagonal block stays local).
+    ``words_cross_shard < words_moved`` is the locality win the sharded
+    bench cells assert: with round-robin page striping roughly ``(S-1)/S``
+    of the live traffic crosses, never all of it.
     """
     streams_served: int = 0
     flushes: int = 0
@@ -144,9 +155,11 @@ class SchedulerStats:
     words_padded: int = 0
     words_folded: int = 0
     words_live: int = 0
+    words_cross_shard: int = 0
     kernel_bursts: int = 0
     gather_fused_bursts: int = 0
     prefill_bursts: int = 0
+    collective_calls: int = 0
 
     @property
     def calls_saved(self) -> int:
@@ -166,10 +179,17 @@ class _Queued:
     gather: Optional[jax.Array] = None
     scatter: Optional[jax.Array] = None
     into: Optional[jax.Array] = None
+    # pool-sharded sparse extent: `(fetch, place, k_tot)` from
+    # ``repro.fabric.sharded.shard_plan`` — the stream lowers as per-shard
+    # fused gathers bridged by one collective instead of a single-device
+    # gather (reads: payload is the sharded pool stream [R, F, N, *rest];
+    # writes: payload is banked and `into` is the sharded pool stream)
+    shard: Optional[Tuple] = None
 
     @property
     def sparse(self) -> bool:
-        return self.gather is not None or self.scatter is not None
+        return (self.gather is not None or self.scatter is not None
+                or self.shard is not None)
 
 
 class BurstScheduler:
@@ -212,7 +232,8 @@ class BurstScheduler:
                    if jnp.dtype(q.payload.dtype) == dtype)
 
     def enqueue_read(self, name: str, lines: jax.Array,
-                     gather: Optional[jax.Array] = None) -> PortSpec:
+                     gather: Optional[jax.Array] = None,
+                     shard: Optional[Tuple] = None) -> PortSpec:
         """Queue a line stream ``[L, N, *rest]`` (L a multiple of N) for the
         read network.  Returns the :class:`PortSpec` keying the result, with
         the stream's packed-burst ``(offset, words)`` extent filled in.
@@ -223,13 +244,46 @@ class BurstScheduler:
         frames) names the live lines — the burst carries only those, and the
         result is the banked ``[K//N, N, N, *rest]`` of the addressed
         frames.  The spec's ``words`` is the live extent; ``pool_words``
-        records what the gather-after-burst fallback would have moved."""
+        records what the gather-after-burst fallback would have moved.
+
+        ``shard = (fetch, place, k_tot)`` (from
+        :func:`repro.fabric.sharded.shard_plan`) is the pool-sharded form of
+        ``gather``: ``lines`` is the rep-major pool stream ``[R, F, N,
+        *rest]`` with its frame axis sharded over the ``pool`` mesh axis,
+        and the stream lowers as per-shard fused gathers bridged by one
+        collective — same banked ``[k_tot//N, N, N, *rest]`` result, bit
+        for bit."""
         n = self.fabric.n_ports
+        self._check_name(name)
+        if shard is not None:
+            if gather is not None:
+                raise ValueError(f"stream {name!r}: shard= and gather= are "
+                                 f"mutually exclusive lowerings")
+            if lines.ndim < 3 or lines.shape[2] != n:
+                raise ValueError(
+                    f"stream {name!r}: sharded read wants the rep-major pool "
+                    f"stream [R, F, N, ...] for N={n}, got {lines.shape}")
+            fetch, place, k_tot = shard
+            s = fetch.shape[0]
+            if k_tot % (s * n):
+                raise ValueError(
+                    f"stream {name!r}: k_tot={k_tot} must split into {s} "
+                    f"shard blocks of whole N={n} groups")
+            rest = tuple(lines.shape[3:])
+            width = _prod(rest)
+            groups = k_tot // n
+            spec = PortSpec(
+                name=name, direction="read", words=groups * width,
+                offset=self._extent(self._reads, jnp.dtype(lines.dtype)),
+                gathered=True,
+                pool_words=lines.shape[0] * lines.shape[1] * width // n)
+            self._reads.append(_Queued(spec, lines, rest, width, groups,
+                                       shard=shard))
+            return spec
         if lines.ndim < 2 or lines.shape[1] != n or lines.shape[0] % n:
             raise ValueError(
                 f"stream {name!r}: want [k*N, N, ...] lines for N={n}, "
                 f"got {lines.shape}")
-        self._check_name(name)
         rest = tuple(lines.shape[2:])
         width = _prod(rest)
         if gather is not None:
@@ -253,7 +307,8 @@ class BurstScheduler:
 
     def enqueue_write(self, name: str, banked: jax.Array,
                       scatter: Optional[jax.Array] = None,
-                      into: Optional[jax.Array] = None) -> PortSpec:
+                      into: Optional[jax.Array] = None,
+                      shard: Optional[Tuple] = None) -> PortSpec:
         """Queue a banked buffer ``[G, N, N, *rest]`` for the write network.
 
         ``scatter``/``into`` make the stream sparse-extent: the write
@@ -261,13 +316,48 @@ class BurstScheduler:
         indexed row of the pool stream ``into [L, N, *rest]`` (sentinel
         indices ``>= L`` drop — padding rows are free; rows the indices
         never touch keep their frames without moving).  The committed
-        result is the updated pool stream."""
+        result is the updated pool stream.
+
+        ``shard = (fetch, place, k_tot)`` is the pool-sharded form of
+        ``scatter``: ``into`` is the rep-major pool stream ``[R, F, N,
+        *rest]`` sharded over the ``pool`` mesh axis, and each banked frame
+        reaches its owning shard through one collective before the local
+        fused scatter lands it."""
         n = self.fabric.n_ports
         if banked.ndim < 3 or banked.shape[1] != n or banked.shape[2] != n:
             raise ValueError(
                 f"stream {name!r}: want [G, N, N, ...] banked for N={n}, "
                 f"got {banked.shape}")
         self._check_name(name)
+        if shard is not None:
+            if scatter is not None:
+                raise ValueError(f"stream {name!r}: shard= and scatter= are "
+                                 f"mutually exclusive lowerings")
+            if into is None:
+                raise ValueError(f"stream {name!r}: sharded write needs the "
+                                 f"pool stream to land in (into=)")
+            if into.ndim != banked.ndim or into.shape[2] != n \
+                    or into.shape[3:] != banked.shape[3:]:
+                raise ValueError(
+                    f"stream {name!r}: sharded scatter target {into.shape} "
+                    f"does not match banked frames {banked.shape} "
+                    f"(want rep-major [R, F, N, ...])")
+            fetch, _, k_tot = shard
+            if k_tot != banked.shape[0] * n:
+                raise ValueError(
+                    f"stream {name!r}: plan k_tot={k_tot} != banked line "
+                    f"count {banked.shape[0] * n}")
+            rest = tuple(banked.shape[3:])
+            width = _prod(rest)
+            spec = PortSpec(
+                name=name, direction="write", words=banked.shape[0] * width,
+                offset=self._extent(self._writes, jnp.dtype(banked.dtype)),
+                gathered=True,
+                pool_words=into.shape[0] * into.shape[1] * width // n)
+            self._writes.append(_Queued(spec, banked, rest, width,
+                                        banked.shape[0], into=into,
+                                        shard=shard))
+            return spec
         if (scatter is None) != (into is None):
             raise ValueError(
                 f"stream {name!r}: sparse writes need both scatter indices "
@@ -338,6 +428,17 @@ class BurstScheduler:
             sparse = [q for q in streams if q.sparse]
             for q in sparse:
                 self.stats.words_live += q.groups * n * n * q.width
+            sharded = [q for q in streams if q.shard is not None]
+            if sharded:
+                # pool-sharded lowering: each stream is its own two-hop
+                # collective burst (per-shard fused gathers + one exchange);
+                # dense streams of the dtype still share one packed burst
+                for q in sharded:
+                    out[q.spec.name] = self._run_sparse_sharded(q, read)
+                streams = [q for q in streams if q.shard is None]
+                sparse = [q for q in streams if q.sparse]
+                if not streams:
+                    continue
             if sparse and self.fabric.burst_kernelized_for(dtype):
                 # fused lowering: each sparse stream is one gather/scatter
                 # burst kernel launch (indices ride as a prefetched operand
@@ -414,6 +515,52 @@ class BurstScheduler:
         banked = view(q.payload, 3)                        # [G, N, N, w/f]
         into = view(q.into, 2)                             # [L, N, w/f]
         moved = self.fabric.write_burst(banked, indices=q.scatter, into=into)
+        out = (_un_view(moved, q.payload.dtype) if fold == 1
+               else _unfold_view(moved, q.payload.dtype))
+        return out.reshape(q.into.shape)
+
+    def _run_sparse_sharded(self, q: _Queued, read: bool) -> jax.Array:
+        """One pool-sharded sparse stream through the two-hop collective
+        lowering (:meth:`repro.fabric.Fabric.read_burst_sharded` /
+        :meth:`~repro.fabric.Fabric.write_burst_sharded`): every shard runs
+        the fused gather/scatter kernel on the frames it owns and one
+        collective bridges them.  Machine-word folding applies exactly as on
+        the single-device kernel path (within-line, the indices address
+        whole frames), so the collective also moves ``1/fold`` the lanes."""
+        n = self.fabric.n_ports
+        fetch, place, k_tot = q.shard
+        s, _, cap = fetch.shape
+        fold = self._sparse_fold(q)
+        elems = q.groups * n * n * q.width
+        self.stats.network_calls += 1
+        self.stats.collective_calls += 1
+        self.stats.gather_fused_bursts += 1
+        if self.fabric.burst_kernelized_for(q.payload.dtype):
+            self.stats.kernel_bursts += 1
+        self.stats.words_moved += elems
+        self.stats.words_folded += elems - elems // fold
+        # the exchange moves whole padded buckets; the diagonal stays local
+        self.stats.words_cross_shard += s * (s - 1) * cap * n * q.width
+        wide = (machine_word_dtype(
+            jnp.dtype(q.payload.dtype).itemsize * fold) if fold > 1 else None)
+
+        def view(x):
+            flat = x.reshape(x.shape[:3] + (q.width,))
+            if fold == 1:
+                return _int_view(flat)
+            return jax.lax.bitcast_convert_type(
+                flat.reshape(flat.shape[:-1] + (q.width // fold, fold)), wide)
+
+        if read:
+            stream = view(q.payload)                       # [R, F, N, w/f]
+            banked = self.fabric.read_burst_sharded(stream, fetch, place,
+                                                    k_tot)
+            out = (_un_view(banked, q.payload.dtype) if fold == 1
+                   else _unfold_view(banked, q.payload.dtype))
+            return out.reshape((q.groups, n, n) + q.rest_shape)
+        banked = view(q.payload)                           # [G, N, N, w/f]
+        into = view(q.into)                                # [R, F, N, w/f]
+        moved = self.fabric.write_burst_sharded(banked, fetch, place, into)
         out = (_un_view(moved, q.payload.dtype) if fold == 1
                else _unfold_view(moved, q.payload.dtype))
         return out.reshape(q.into.shape)

@@ -48,7 +48,7 @@ def make_production_mesh(*, multi_pod: bool = False):
         raise RuntimeError(
             f"mesh {shape} needs {n} devices, have {len(devices)} — the "
             f"dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count"
-            f"=512 before any jax import")
+            f"={n} before any jax import")
     return compat_mesh(devices[:n], shape, axes)
 
 
@@ -57,7 +57,10 @@ def make_mesh(shape: tuple, axes: tuple):
     n = math.prod(shape)
     devices = jax.devices()
     if len(devices) < n:
-        raise RuntimeError(f"mesh {shape} needs {n} devices")
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} before "
+            f"any jax import")
     return compat_mesh(devices[:n], shape, axes)
 
 

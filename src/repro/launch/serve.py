@@ -63,6 +63,20 @@ def main():
                          "fallback that banks the whole pool")
     ap.add_argument("--engine", action="store_true",
                     help="serve through the paged continuous-batching engine")
+    ap.add_argument("--pool-shards", type=int, default=0,
+                    help="shard the physical page pool over this many "
+                         "devices on a `pool` mesh axis: fused sparse "
+                         "bursts lower as per-shard gathers bridged by one "
+                         "collective, pages stripe round-robin across "
+                         "shards (0 = FabricConfig.pool_shards, off); "
+                         "needs XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=<shards> on CPU")
+    ap.add_argument("--collective", default=None,
+                    choices=[None, "all_to_all", "ring"],
+                    help="exchange-hop collective for the sharded pool: "
+                         "XLA's all_to_all or the explicit ring of "
+                         "ppermute rotations (the butterfly-vs-rotation "
+                         "A/B; value-identical)")
     ap.add_argument("--pack", default=None, choices=[None, "packed", "pad"],
                     help="burst layout for the scheduled decode step")
     ap.add_argument("--word-fold", default=None,
@@ -121,7 +135,9 @@ def main():
     if args.engine:
         from repro.serving import Request, ServingEngine
         eng = ServingEngine(cfg, params, max_slots=args.batch, t_max=t_max,
-                            pool_pages=args.pool_pages)
+                            pool_pages=args.pool_pages,
+                            pool_shards=args.pool_shards,
+                            collective=args.collective)
         prompts = np.asarray(batch["tokens"])
         reqs = [Request(i, prompts[i], max_new_tokens=args.gen_len)
                 for i in range(args.batch)]
@@ -159,6 +175,15 @@ def main():
                       f"through {fs.gather_fused_bursts} sparse-extent "
                       f"bursts (decode traffic scales with live tokens, "
                       f"not pool capacity)")
+                if fs.collective_calls:
+                    local = fs.words_moved - fs.words_cross_shard
+                    print(f"sharded pool: {eng.pool_shards} shards x "
+                          f"{eng.fabric.config.collective} — "
+                          f"{fs.words_cross_shard} words crossed shards vs "
+                          f"{max(local, 0)} local, through "
+                          f"{fs.collective_calls} collective exchanges "
+                          f"(pages striped "
+                          f"{eng.kv.pool.free_pages_by_shard} free/shard)")
             elif eng.paged:
                 print("fused gather: off — gather-after-burst fallback "
                       "banks the whole pool each step")

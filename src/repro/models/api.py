@@ -85,7 +85,7 @@ def init_cache(cfg: ModelConfig, batch: int, t_max: int,
 
 def decode_fn(params, token, caches, pos, cfg: ModelConfig, sched=None,
               page_table=None, page_size: int = 0, t_depth: int = 0,
-              live_plan=None):
+              live_plan=None, shard_plans=None):
     """One decode step.  ``sched`` (a :class:`repro.fabric.BurstScheduler`)
     routes the step's KV banking — and ``serve_fsdp`` weight streaming —
     through one read and one write network burst (decoder-only families).
@@ -94,13 +94,17 @@ def decode_fn(params, token, caches, pos, cfg: ModelConfig, sched=None,
     gather-based decode (``FabricConfig.paged_pool``); ``live_plan`` (the
     operands from :func:`repro.models.common.page_live_plan`) fuses the
     pool gather into the burst contract so the networks move only live
-    frames (``FabricConfig.fused_gather``)."""
+    frames (``FabricConfig.fused_gather``); ``shard_plans`` (``{reps:
+    (fetch, place)}`` from :func:`repro.fabric.shard_plan`) lowers those
+    sparse bursts over the pool-sharded device mesh
+    (``FabricConfig.pool_shards``)."""
     if cfg.family == "audio":
         assert page_table is None, "paged pool covers decoder-only families"
         return whisper.decode_step(params, token, caches, pos, cfg)
     return lm.decode_step(params, token, caches, pos, cfg, sched=sched,
                           page_table=page_table, page_size=page_size,
-                          t_depth=t_depth, live_plan=live_plan)
+                          t_depth=t_depth, live_plan=live_plan,
+                          shard_plans=shard_plans)
 
 
 def greedy_generate(params, prompt, cfg: ModelConfig, steps: int,

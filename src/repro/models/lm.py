@@ -319,7 +319,7 @@ def forward(params, tokens, cfg: ModelConfig, *, patch_embeds=None,
 
 def decode_step(params, token, caches, pos, cfg: ModelConfig, sched=None,
                 page_table=None, page_size: int = 0, t_depth: int = 0,
-                live_plan=None):
+                live_plan=None, shard_plans=None):
     """One serving decode step: ``token [B, 1]`` + caches at ``pos`` →
     (logits [B, 1, V], new caches).  KV caches are read through the Medusa
     port-major layout engine (cfg.kv_layout).
@@ -353,7 +353,14 @@ def decode_step(params, token, caches, pos, cfg: ModelConfig, sched=None,
     live frames the table maps (indices prefetched into the fused burst
     kernel on the kernelized medusa fabric), so the network's traffic
     scales with live tokens rather than pool capacity — bit-identical to
-    both the gather-after-burst form and the dense engine."""
+    both the gather-after-burst form and the dense engine.
+
+    With ``shard_plans`` (``{reps: (fetch, place)}`` device operands from
+    :func:`repro.fabric.shard_plan`, one per distinct leaf rep count —
+    ``FabricConfig.pool_shards > 1``), the fused sparse bursts lower over
+    the pool-sharded mesh instead: per-shard fused gathers bridged by one
+    collective per stream (:mod:`repro.fabric.sharded`), bit-identical to
+    the single-device fused path.  Requires ``live_plan``."""
     pos = jnp.asarray(pos, jnp.int32)
     positions = pos[None] if pos.ndim == 0 else pos[:, None]
     phys = (None if page_table is None
@@ -362,7 +369,10 @@ def decode_step(params, token, caches, pos, cfg: ModelConfig, sched=None,
     if plan is not None:
         live = live_plan if phys is not None else None
         return _decode_step_scheduled(params, token, caches, pos, positions,
-                                      cfg, sched, plan, phys=phys, live=live)
+                                      cfg, sched, plan, phys=phys, live=live,
+                                      shard_plans=(shard_plans
+                                                   if live is not None
+                                                   else None))
     if phys is not None:
         return _decode_step_paged_fallback(params, token, caches, pos,
                                            positions, cfg, phys)
@@ -417,7 +427,7 @@ def _flat_frames(pool: jax.Array) -> jax.Array:
 
 def _decode_step_scheduled(params, token, caches, pos, positions,
                            cfg: ModelConfig, sched, plan, phys=None,
-                           live=None):
+                           live=None, shard_plans=None):
     """The burst-scheduled decode step (see :func:`decode_step`).
 
     Burst 1 (read network): every planned KV leaf — and, under
@@ -443,17 +453,37 @@ def _decode_step_scheduled(params, token, caches, pos, positions,
     if live is not None:
         live_idx, expand, dense_pos = live
 
+    def leaf_reps(leaf):
+        """The leaf's leading layer-stack factor (1 for tail leaves)."""
+        flat = _flat_frames(leaf)
+        reps = 1
+        for s in flat.shape[:-3]:
+            reps *= s
+        return reps
+
     def leaf_gather_idx(leaf):
         """The leaf's sparse read/scatter indices: the step's live frames,
         tiled over the leaf's leading layer axis (unit leaves stack reps)."""
         flat = _flat_frames(leaf)
-        frames = flat.shape[-3]
         if flat.ndim == 3:                       # tail leaf: [F, N, D]
             return live_idx
-        reps = 1
-        for s in flat.shape[:-3]:
-            reps *= s
-        return cm.pool_rep_indices(live_idx, reps, frames)
+        return cm.pool_rep_indices(live_idx, leaf_reps(leaf), flat.shape[-3])
+
+    def leaf_shard(leaf):
+        """The leaf's ``shard=`` operand tuple: the step's pre-split
+        fetch/place plan for its rep count, plus the static line total."""
+        reps = leaf_reps(leaf)
+        fetch, place = shard_plans[reps]
+        return fetch, place, reps * live_idx.shape[0]
+
+    def leaf_stream(leaf):
+        """The leaf's rep-major pool line stream ``[R, F, N, D]`` — the
+        explicit rep axis keeps page ownership consistent across reps under
+        the pool-sharded ``PartitionSpec``."""
+        flat = _flat_frames(leaf)
+        if flat.ndim == 3:
+            return flat[None]
+        return flat.reshape((-1,) + flat.shape[-3:])
 
     # -- burst 1: weight stream + KV banking --------------------------------
     streamed = None
@@ -463,6 +493,11 @@ def _decode_step_scheduled(params, token, caches, pos, positions,
         for leaf_name in ("k", "v"):
             leaf = caches[kind][i][leaf_name]
             if phys is not None:
+                if live is not None and shard_plans is not None:
+                    sched.enqueue_read(f"{kind}{i}/{leaf_name}",
+                                       leaf_stream(leaf),
+                                       shard=leaf_shard(leaf))
+                    continue
                 flat = _flat_frames(leaf)
                 sched.enqueue_read(
                     f"{kind}{i}/{leaf_name}", cm.kv_leaf_to_lines(flat),
@@ -528,6 +563,12 @@ def _decode_step_scheduled(params, token, caches, pos, positions,
                 compact = cm.gather_pool_frames(flat, dense_pos,
                                                 flat.ndim - 2)
                 leaf = caches[kind][i][leaf_name]
+                if shard_plans is not None:
+                    sched.enqueue_write(
+                        f"{kind}{i}/{leaf_name}",
+                        cm.port_major_to_banked(compact),
+                        shard=leaf_shard(leaf), into=leaf_stream(leaf))
+                    continue
                 sched.enqueue_write(
                     f"{kind}{i}/{leaf_name}",
                     cm.port_major_to_banked(compact),

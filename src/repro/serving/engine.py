@@ -46,6 +46,7 @@ Decoder-only families (dense/moe/ssm/hybrid/vlm); greedy sampling.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import List, Optional
 
 import jax
@@ -53,10 +54,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.fabric import BurstScheduler, Fabric, PagedKVCache, SchedulerStats
+from repro.fabric import (BurstScheduler, Fabric, PagedKVCache,
+                          SchedulerStats, make_pool_mesh, shard_plan)
 from repro.models import api
 from repro.models import common as cm
 from repro.models import lm
+
+
+def _lead_prod(flat) -> int:
+    """Product of a flattened pool leaf's leading (layer-stack) axes."""
+    reps = 1
+    for s in flat.shape[:-3]:
+        reps *= s
+    return reps
 
 
 @dataclasses.dataclass
@@ -72,13 +82,27 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, max_slots: int, t_max: int,
                  page_size: int = 0, paged_pool: Optional[bool] = None,
                  pool_pages: int = 0, prefill_burst: Optional[bool] = None,
-                 fused_gather: Optional[bool] = None):
+                 fused_gather: Optional[bool] = None, pool_shards: int = 0,
+                 collective: Optional[str] = None):
         assert cfg.family != "audio", "engine covers decoder-only families"
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
         self.t_max = t_max
-        self.fabric = Fabric(cfg.resolved_fabric)
+        # pool-sharded lowering (FabricConfig.pool_shards): the pool axis of
+        # every full-attention leaf shards over a `pool` device-mesh axis
+        # and the fused sparse bursts become per-shard gathers bridged by
+        # one collective (repro.fabric.sharded) — the engine runs unchanged
+        # otherwise; 0 inherits the model config's setting
+        fab_cfg = cfg.resolved_fabric
+        shards = pool_shards or fab_cfg.pool_shards
+        if shards > 1 or collective is not None:
+            fab_cfg = dataclasses.replace(
+                fab_cfg, pool_shards=shards,
+                collective=collective or fab_cfg.collective).validate()
+        self.pool_shards = shards = fab_cfg.pool_shards
+        mesh = make_pool_mesh(shards) if shards > 1 else None
+        self.fabric = Fabric(fab_cfg, mesh=mesh)
         # cache depth rounds up so every full-attention leaf's line count
         # divides N and the whole cache moves through the step's shared
         # burst; positions beyond t_max are masked, so this is free capacity
@@ -97,8 +121,10 @@ class ServingEngine:
             pages_per_slot = -(-self.t_alloc // ps)
             pool_pages = pool_pages or max_slots * pages_per_slot
             # the pool rides the decode step's shared burst as one line
-            # stream, so its frame count rounds up to a multiple of N
-            while (pool_pages * ps) % n:
+            # stream, so its frame count rounds up to a multiple of N; under
+            # the sharded lowering it must also split into `shards` equal
+            # contiguous page blocks (PartitionSpec("pool") ownership)
+            while (pool_pages * ps) % n or pool_pages % shards:
                 pool_pages += 1
         else:
             pool_pages = 0
@@ -112,15 +138,27 @@ class ServingEngine:
         self.fused = ((cfg.resolved_fabric.fused_gather_on
                        if fused_gather is None else fused_gather)
                       and self.paged and self.fabric.banks_kv)
+        if shards > 1 and not self.fused:
+            raise ValueError(
+                f"pool_shards={shards} needs the fused-gather pool contract "
+                f"(paged pool + a fabric that banks KV) — the sharded "
+                f"lowering is the sparse burst's collective form")
         # live-plan lengths quantize to whole page-of-lines buckets so the
-        # jitted step retraces per occupancy *bucket*, not per page
-        self.live_bucket = ps * n
+        # jitted step retraces per occupancy *bucket*, not per page; sharded,
+        # the bucket also keeps every rep's line total divisible into
+        # `shards` blocks of whole N-groups (lcm, so 1 shard is unchanged)
+        self.live_bucket = n * math.lcm(ps, shards)
         self.kv = PagedKVCache(
             api.init_cache(cfg, max_slots, self.t_alloc,
                            pool_pages=pool_pages, page_size=ps),
             max_slots, self.t_alloc, ps, pool_pages=pool_pages,
             paged_entries=entries if self.paged else (), fabric=self.fabric,
-            fused_gather=self.fused)
+            fused_gather=self.fused, pool_shards=shards)
+        # distinct leading rep counts over the paged leaves — the sharded
+        # step carries one (fetch, place) plan per rep count
+        self._shard_reps = sorted({
+            max(1, _lead_prod(lm._flat_frames(self.kv.caches[kind][i]["k"])))
+            for kind, i in entries}) if (self.paged and shards > 1) else []
         self.pos = np.zeros((max_slots,), np.int32)      # next write position
         self.active: List[Optional[Request]] = [None] * max_slots
         self.tokens = np.zeros((max_slots, 1), np.int32)
@@ -139,7 +177,16 @@ class ServingEngine:
         # (plus one eager prefill burst per admission wave).
         self.fabric_stats = SchedulerStats()
 
-        if self.paged and self.fused:
+        if self.paged and self.fused and shards > 1:
+            def _step(p, tok, caches, pos, page_table, live_idx, expand,
+                      dense_pos, shard_plans):
+                sched = BurstScheduler(self.fabric, stats=self.fabric_stats)
+                return api.decode_fn(p, tok, caches, pos, cfg, sched=sched,
+                                     page_table=page_table, page_size=ps,
+                                     t_depth=self.t_alloc,
+                                     live_plan=(live_idx, expand, dense_pos),
+                                     shard_plans=shard_plans)
+        elif self.paged and self.fused:
             def _step(p, tok, caches, pos, page_table, live_idx, expand,
                       dense_pos):
                 sched = BurstScheduler(self.fabric, stats=self.fabric_stats)
@@ -223,9 +270,21 @@ class ServingEngine:
             live_idx, expand, dense_pos = cm.page_live_plan(
                 self.kv.pool.table, self.page_size, self.t_alloc,
                 self.fabric.n_ports, bucket=self.live_bucket)
-            logits, new_caches = self._decode(
-                *args, self.kv.page_table_device(), jnp.asarray(live_idx),
-                jnp.asarray(expand), jnp.asarray(dense_pos))
+            plan_args = (self.kv.page_table_device(), jnp.asarray(live_idx),
+                         jnp.asarray(expand), jnp.asarray(dense_pos))
+            if self.pool_shards > 1:
+                # host-side split of the live set by owning shard: one
+                # fetch/place plan per distinct leaf rep count (the bucket
+                # capacity quantizes to whole pages to bound retraces)
+                frames = self.kv.pool.n_pages * self.page_size
+                plans = {
+                    reps: shard_plan(live_idx, frames, self.pool_shards,
+                                     self.fabric.n_ports, reps=reps,
+                                     cap_bucket=self.page_size).operands()
+                    for reps in self._shard_reps}
+                logits, new_caches = self._decode(*args, *plan_args, plans)
+            else:
+                logits, new_caches = self._decode(*args, *plan_args)
         elif self.paged:
             logits, new_caches = self._decode(
                 *args, self.kv.page_table_device())

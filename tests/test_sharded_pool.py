@@ -1,0 +1,250 @@
+"""Pool-sharded fabric lowering (``FabricConfig.pool_shards``).
+
+Three levels, mirroring the fused-gather acceptance bar:
+
+* plan level (host-only) — :func:`repro.fabric.shard_plan` buckets a sparse
+  burst's frame list by (requesting shard, owning shard); a numpy
+  simulation of the two-hop lowering (local fetch → exchange → placement)
+  must reproduce ``take`` exactly, sentinels and duplicates included;
+* allocator level (host-only) — :class:`repro.fabric.PagePool` stripes
+  allocation round-robin over the shard blocks and ``check()`` enforces the
+  per-shard conservation invariant through churn;
+* burst + engine level — in a subprocess per forced host device count
+  (1/2/4/8; the XLA device count is frozen at first jax import): the
+  sharded read/write bursts, and a full churny-arrival engine run, are
+  bit-identical to their single-device fused-gather equivalents.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.fabric import PagePool, shard_plan
+from repro.fabric.scheduler import FRAME_SENTINEL as SENTINEL
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(code, devices=8, timeout=540):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.pathsep.join([os.path.join(ROOT, "src"), ROOT])
+    return subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout,
+                          cwd=ROOT)
+
+
+# ---------------------------------------------------------------------------
+# plan level: shard_plan is an exact decomposition of take
+# ---------------------------------------------------------------------------
+
+def _simulate_plan(plan, pool, frames, reps):
+    """Numpy re-enactment of the two-hop lowering on a scalar-per-line pool
+    ``[reps, frames]``: each owner fetches its local rows, the exchange
+    transposes the (owner, requestor) blocks, each requestor places what it
+    received.  Returns the reassembled ``[k_tot]`` request stream."""
+    s, cap = plan.n_shards, plan.cap
+    f_loc, k_loc = frames // s, plan.k_tot // s
+    local = [pool[:, o * f_loc:(o + 1) * f_loc].reshape(-1)
+             for o in range(s)]                      # rep-major local rows
+    out = np.zeros(plan.k_tot, pool.dtype)
+    for o in range(s):
+        for r in range(s):
+            rows = plan.fetch[o, r]
+            sent = np.where(rows < reps * f_loc, local[o][rows % (reps * f_loc)],
+                            0)                       # sentinel rows fetch 0
+            dst = plan.place[r, o]
+            keep = dst < k_loc                       # sentinel placements drop
+            out[r * k_loc + dst[keep]] = sent[keep]
+    return out
+
+
+@pytest.mark.parametrize("n_shards", (1, 2, 4))
+@pytest.mark.parametrize("reps", (1, 3))
+def test_shard_plan_reproduces_take(n_shards, reps):
+    """Fetch → exchange → place == ``take(pool, tiled_indices)`` for churny
+    index lists: shuffled, duplicated, sentinel-padded."""
+    frames, n = 32, 4
+    rng = np.random.RandomState(7 * n_shards + reps)
+    k = 48 // reps * reps
+    while (reps * k) % (n_shards * n):
+        k += 1
+    idx = rng.randint(0, frames, size=k).astype(np.int64)
+    idx[rng.permutation(k)[:5]] = SENTINEL           # padding requests
+    idx[1] = idx[0]                                  # duplicate frame
+    plan = shard_plan(idx, frames, n_shards, n, reps=reps)
+    pool = rng.randn(reps, frames)
+    got = _simulate_plan(plan, pool, frames, reps)
+    tiled = np.tile(idx, reps)
+    rep_of = np.arange(reps * k) // k
+    want = np.where(tiled < frames,
+                    pool[rep_of, np.minimum(tiled, frames - 1)], 0)
+    np.testing.assert_array_equal(got, want)
+    assert plan.cross_frames + plan.local_frames == int(
+        (tiled < frames).sum())
+
+
+def test_shard_plan_cap_rounding_and_validation():
+    idx = np.arange(16, dtype=np.int64)
+    plan = shard_plan(idx, 16, 2, 4, cap_bucket=6)
+    assert plan.cap % 4 == 0 and plan.cap % 6 == 0   # N and bucket rounding
+    assert plan.fetch.shape == plan.place.shape == (2, 2, plan.cap)
+    with pytest.raises(ValueError, match="shard blocks"):
+        shard_plan(np.arange(10, dtype=np.int64), 16, 2, 4)   # 10 % (2*4)
+    with pytest.raises(ValueError, match="equal shard blocks"):
+        shard_plan(idx, 15, 2, 4)                    # frames % shards
+    with pytest.raises(ValueError, match="n_shards"):
+        shard_plan(idx, 16, 0, 4)
+
+
+def test_shard_plan_striped_traffic_is_mostly_local():
+    """Round-robin-striped frames (the PagePool allocation order) leave
+    exactly 1/S of the requests on their owning shard: ``cross_frames`` is
+    ``(S-1)/S`` of the live traffic — the bench's locality split."""
+    s, n, frames = 4, 4, 64
+    f_loc = frames // s
+    k = 32
+    idx = ((np.arange(k) % s) * f_loc + np.arange(k) // s).astype(np.int64)
+    plan = shard_plan(idx, frames, s, n)
+    assert plan.local_frames == k // s
+    assert plan.cross_frames == k - k // s
+
+
+# ---------------------------------------------------------------------------
+# allocator level: round-robin striping + per-shard conservation
+# ---------------------------------------------------------------------------
+
+def test_pool_striping_balances_shards():
+    pool = PagePool(page_size=4, n_pages=16, pages_per_slot=4, n_slots=4,
+                    n_shards=4)
+    assert pool.free_pages_by_shard == (4, 4, 4, 4)
+    pool.ensure(0, 2)                                # 2 logical pages
+    pool.ensure(1, 2)                                # 2 logical pages
+    assert pool.free_pages_by_shard == (3, 3, 3, 3)
+    # each allocated page landed in a distinct shard block, lowest-first
+    mapped = sorted(p for row in pool.table for p in row if p >= 0)
+    assert [pool.shard_of(p) for p in mapped] == [0, 1, 2, 3]
+    pool.check()
+
+
+def test_pool_per_shard_conservation_through_churn():
+    pool = PagePool(page_size=2, n_pages=8, pages_per_slot=4, n_slots=3,
+                    n_shards=2)
+    pool.ensure(0, 3)                                # 3 logical pages
+    pool.check()
+    pool.ensure(1, 2)                                # 2 logical pages
+    pool.check()
+    assert sum(pool.free_pages_by_shard) == pool.free_pages == 3
+    pool.release(0)
+    pool.check()
+    assert pool.free_pages == 6
+    # released pages went home: every block's stack + mapped rows still
+    # partition exactly that block (check() would raise otherwise)
+    pool.ensure(2, 4)                                # re-use released pages
+    pool.check()
+
+
+def test_pool_shard_count_must_divide_pages():
+    with pytest.raises(ValueError, match="shard"):
+        PagePool(page_size=2, n_pages=10, pages_per_slot=2, n_slots=2,
+                 n_shards=4)
+
+
+def test_pool_unsharded_is_seed_allocator():
+    """``n_shards=1`` must behave exactly like the seed: one block, pages
+    allocated lowest-first."""
+    pool = PagePool(page_size=2, n_pages=6, pages_per_slot=3, n_slots=2)
+    pool.ensure(0, 3)
+    mapped = [p for p in pool.table[0] if p >= 0]
+    assert mapped == [0, 1, 2]
+    assert pool.n_shards == 1 and pool.free_pages_by_shard == (3,)
+    pool.check()
+
+
+# ---------------------------------------------------------------------------
+# burst + engine level: bit-parity per forced device count (subprocess)
+# ---------------------------------------------------------------------------
+
+_BURST_CODE = """
+import numpy as np, jax, jax.numpy as jnp, dataclasses
+from repro.fabric import Fabric, shard_plan
+from repro.fabric.sharded import make_pool_mesh
+from repro.fabric.scheduler import FRAME_SENTINEL
+from repro.kernels import ops
+shards, n, w, frames, collective = {shards}, 4, 6, 32, "{collective}"
+ops.use_kernels({kernels})
+rng = np.random.RandomState(3)
+idx = rng.randint(0, frames, size=24).astype(np.int32)
+idx[5] = idx[4]                                   # duplicate frame
+idx = np.concatenate([idx, np.full(8, FRAME_SENTINEL, np.int32)])
+pool = jax.random.normal(jax.random.PRNGKey(0), (frames, n, w), jnp.float32)
+upd = jax.random.normal(jax.random.PRNGKey(1),
+                        (idx.shape[0] // n, n, n, w), jnp.float32)
+ref_fab = Fabric.make(n, "medusa")
+ref_read = ref_fab.read_burst(pool, indices=jnp.asarray(idx))
+ref_pool = ref_fab.write_burst(upd, indices=jnp.asarray(idx), into=pool)
+fab = dataclasses.replace(
+    Fabric.make(n, "medusa", pool_shards=shards, collective=collective),
+    mesh=make_pool_mesh(shards))
+plan = shard_plan(idx, frames, shards, n)
+fetch, place = plan.operands()
+got_read = fab.read_burst_sharded(pool[None], fetch, place, plan.k_tot)
+got_pool = fab.write_burst_sharded(upd, fetch, place, pool[None])
+np.testing.assert_array_equal(np.asarray(got_read), np.asarray(ref_read))
+np.testing.assert_array_equal(np.asarray(got_pool[0]), np.asarray(ref_pool))
+print("OK")
+"""
+
+
+@pytest.mark.parametrize("shards,collective,kernels",
+                         [(2, "all_to_all", False),
+                          (4, "ring", False),
+                          (8, "all_to_all", True)])
+def test_sharded_bursts_match_single_device(shards, collective, kernels):
+    """``read_burst_sharded``/``write_burst_sharded`` == the single-device
+    sparse bursts, bit for bit, across shard counts × collectives × the
+    fused-kernel toggle (duplicates and sentinel rows included)."""
+    r = _run(_BURST_CODE.format(shards=shards, collective=collective,
+                                kernels=kernels), devices=shards)
+    assert "OK" in r.stdout, r.stderr[-3000:]
+
+
+_ENGINE_CODE = """
+import dataclasses, numpy as np
+from repro.kernels import ops
+ops.use_kernels(False)
+from repro.configs import get_smoke
+from tests.test_paged_pool import _drive
+cfg = dataclasses.replace(get_smoke("starcoder2-15b"), dtype="float32")
+arrivals = [(0, 5, 4), (0, 9, 3), (2, 2, 6), (4, 11, 2), (6, 3, 3)]
+gen_r, logs_r, lives_r, _ = _drive(cfg, arrivals, paged_pool=True)
+gen_s, logs_s, lives_s, eng = _drive(cfg, arrivals, paged_pool=True,
+                                     pool_shards={shards})
+assert gen_r == gen_s, (gen_r, gen_s)
+assert lives_r == lives_s
+for i, (a, b) in enumerate(zip(logs_r, logs_s)):
+    np.testing.assert_array_equal(a, b, err_msg=f"step {{i}}")
+fs = eng.fabric_stats
+if {shards} > 1:
+    assert eng.pool_shards == {shards}
+    assert eng.kv.pool.n_shards == {shards}
+    assert fs.collective_calls > 0
+    assert fs.words_cross_shard > 0
+else:
+    assert fs.collective_calls == 0 and fs.words_cross_shard == 0
+print("OK")
+"""
+
+
+@pytest.mark.parametrize("shards", (1, 2, 4, 8))
+def test_engine_sharded_bit_identical_churny(shards):
+    """The full churny-arrival engine matrix (slot reuse, staggered
+    arrivals, mixed prompt lengths — the ``test_fused_gather`` workload) is
+    bit-identical between the pool-sharded engine at 1/2/4/8 forced devices
+    and the single-device fused-gather engine; ``_drive`` runs the
+    per-shard ``PagePool.check()`` invariant every step."""
+    r = _run(_ENGINE_CODE.format(shards=shards), devices=max(shards, 1))
+    assert "OK" in r.stdout, (r.stdout[-500:], r.stderr[-3000:])
