@@ -104,6 +104,19 @@ class FabricConfig:
     gather-after-burst fallback — the network moves every pool frame).
     ``"auto"`` (default) follows ``paged_pool``.
 
+    ``preempt`` selects what the serving engine does when a higher-priority
+    request would otherwise wait on a full pool: ``"swap"`` (the default)
+    evicts a victim slot's pages to host memory over the fabric — swap-out
+    rides the read network's fused page-table gather, swap-in the write
+    network's scatter, as ``swap/*`` sparse-extent streams — and re-admits
+    the victim ahead of the queue later; ``"recompute"`` drops the victim's
+    pages and re-prefills its prompt + generated prefix on re-admission
+    (cheaper than swapping when the sequence is short — the vLLM
+    tradeoff); ``"off"`` keeps the seed engine's head-of-line blocking.
+    ``swap_space_pages`` caps the host swap space (in pages); a swap-out
+    that would exceed it degrades to recompute for that victim.  ``0``
+    (default) means unbounded.
+
     ``pool_shards`` shards the physical page pool over a ``pool`` device
     mesh axis: every full-attention leaf's page axis splits into
     ``pool_shards`` contiguous blocks (the :func:`~repro.fabric.sharded.
@@ -130,6 +143,8 @@ class FabricConfig:
     fused_gather: "str | bool" = "auto"   # auto | True | False
     pool_shards: int = 1          # pool-axis shards over the device mesh
     collective: str = "all_to_all"    # all_to_all | ring
+    preempt: str = "swap"         # swap | recompute | off
+    swap_space_pages: int = 0     # host swap-space cap in pages (0 = unbounded)
 
     @property
     def line_width(self) -> int:
@@ -161,6 +176,12 @@ class FabricConfig:
         if self.collective not in ("all_to_all", "ring"):
             raise ValueError(f"collective must be 'all_to_all' or 'ring', "
                              f"got {self.collective!r}")
+        if self.preempt not in ("swap", "recompute", "off"):
+            raise ValueError(f"preempt must be 'swap', 'recompute' or 'off', "
+                             f"got {self.preempt!r}")
+        if self.swap_space_pages < 0:
+            raise ValueError(f"swap_space_pages must be >= 0, "
+                             f"got {self.swap_space_pages}")
         if self.n_ports < 1 or self.lane_width < 1:
             raise ValueError(f"bad fabric geometry N={self.n_ports} "
                              f"W_acc={self.lane_width}")

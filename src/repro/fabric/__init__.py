@@ -61,12 +61,13 @@ deprecated shim over :class:`Fabric`.
 
 from repro.configs.base import FabricConfig, PortSpec
 from repro.fabric.fabric import Fabric
-from repro.fabric.paged_kv import PagedKVCache, PagePool, PageTable
+from repro.fabric.paged_kv import (PagedKVCache, PagePool, PageTable,
+                                   SwapRecord)
 from repro.fabric.scheduler import BurstScheduler, SchedulerStats
 from repro.fabric.sharded import (ShardPlan, make_pool_mesh,
                                   pool_partition_spec, shard_plan)
 
 __all__ = ["Fabric", "FabricConfig", "PortSpec", "BurstScheduler",
            "SchedulerStats", "PagedKVCache", "PagePool", "PageTable",
-           "ShardPlan", "shard_plan", "pool_partition_spec",
+           "SwapRecord", "ShardPlan", "shard_plan", "pool_partition_spec",
            "make_pool_mesh"]

@@ -144,6 +144,8 @@ class PagePool:
         self._rr = 0
         self.pages_allocated = 0
         self.pages_reclaimed = 0
+        self.pages_swapped_out = 0
+        self.pages_swapped_in = 0
 
     def shard_of(self, page: int) -> int:
         """The mesh shard owning physical page ``page`` (contiguous blocks)."""
@@ -213,6 +215,24 @@ class PagePool:
         self.pages_reclaimed += len(phys)
         return len(phys)
 
+    def swap_out(self, slot: int) -> int:
+        """Victim eviction: return the slot's physical pages to the free
+        list after its frames were staged to the host swap space.  Built on
+        :meth:`release`, so the conservation counters stay balanced; the
+        ``pages_swapped_*`` counters are the swap-traffic census."""
+        n = self.release(slot)
+        self.pages_swapped_out += n
+        return n
+
+    def swap_in(self, slot: int, n_pages: int) -> List[Tuple[int, int]]:
+        """Re-map an evicted slot's ``n_pages`` logical pages from the free
+        list.  The pages come up wherever the allocator finds them — the
+        scatter restore addresses the new physical rows, so placement is
+        free to differ from the pre-eviction mapping."""
+        new = self.ensure(slot, n_pages)
+        self.pages_swapped_in += len(new)
+        return new
+
     def check(self) -> None:
         """Free-list conservation: every physical page is exactly once in
         the free lists or the table, the lifetime counters balance, and —
@@ -242,6 +262,24 @@ class PagePool:
             raise ValueError(
                 f"counter drift: allocated={self.pages_allocated} "
                 f"reclaimed={self.pages_reclaimed} in_use={len(mapped)}")
+
+
+@dataclasses.dataclass
+class SwapRecord:
+    """Host swap-space image of an evicted slot.
+
+    ``frames`` holds each paged leaf's mapped frames as line-major host
+    arrays (``[reps * span, Hkv, D]`` — the exact bytes the read network
+    staged out); ``unpaged`` holds the slot slices of every non-paged leaf
+    (ring windows, recurrent state).  ``mapped`` is the physical page count
+    to re-map on swap-in; ``used_pages`` / ``dirty`` restore the logical
+    page table and the dense-splice counterfactual."""
+
+    mapped: int
+    used_pages: int
+    dirty: int
+    frames: Dict[Tuple[str, int, str], np.ndarray]
+    unpaged: Dict[str, np.ndarray]
 
 
 class PagedKVCache:
@@ -284,6 +322,9 @@ class PagedKVCache:
         # -1 = never occupied.  This is the dense-splice counterfactual the
         # seed engine would pay on refill (see module docstring).
         self._dirty = np.full((max_slots,), -1, np.int64)
+        # serving-path fault seam: when set, swap transfers consult it for
+        # injected in-flight corruption (caught by the parity check)
+        self.fault_injector = None
 
     # -- geometry / accounting -------------------------------------------------
     @property
@@ -368,6 +409,221 @@ class PagedKVCache:
         self.table.free(slot)
         if self.pool is not None:
             self.pool.release(slot)
+
+    # -- swap (graceful degradation under oversubscription) --------------------
+    def swap_out(self, slot: int,
+                 stats: Optional[SchedulerStats] = None) -> SwapRecord:
+        """Evict ``slot`` to the host swap space: stage every mapped frame
+        out over the read network's fused page-table gather — one
+        ``swap/<slot>/<leaf>`` sparse-extent stream per paged leaf, one
+        flush for the slot — then free the physical pages.  Returns the
+        record :meth:`swap_in` consumes.  The transfer is parity-checked
+        end to end (and retried once on mismatch), so the round trip is
+        bit-exact like every other fabric stream."""
+        if self.pool is None:
+            raise ValueError("swap requires the shared page pool")
+        record = SwapRecord(mapped=self.pool.mapped(slot),
+                            used_pages=int(self.table.used[slot]),
+                            dirty=int(self._dirty[slot]),
+                            frames={}, unpaged=self._extract_unpaged(slot))
+        if record.mapped:
+            pf = self._phys_frames(slot, record.mapped * self.table.page_size)
+            if self._fused_eligible():
+                record.frames = self._swap_gather(slot, pf, stats)
+            else:
+                # off the network geometry: direct host-side stage (the
+                # splice fallback — still bit-exact, just not burst traffic)
+                record.frames = {
+                    (kind, i, name): np.asarray(jnp.take(
+                        _flat_frames_lines(self.caches[kind][i][name]),
+                        jnp.asarray(self._rep_idx(kind, i, pf)), axis=0))
+                    for kind, i in self.paged_entries
+                    for name in ("k", "v")}
+        self.table.free(slot)
+        self.pool.swap_out(slot)
+        return record
+
+    def swap_in(self, slot: int, record: SwapRecord,
+                stats: Optional[SchedulerStats] = None) -> None:
+        """Re-admit an evicted slot: re-map physical pages from the free
+        list and restore the host image — the write network's scatter lands
+        every frame at its new physical row.  One flush per slot, so two
+        concurrent restores never scatter into the same pool leaf in one
+        network call."""
+        if self.pool is None:
+            raise ValueError("swap requires the shared page pool")
+        self.pool.swap_in(slot, record.mapped)
+        self.table.used[slot] = record.used_pages
+        self._dirty[slot] = record.dirty
+        if record.mapped:
+            span = record.mapped * self.table.page_size
+            pf = self._phys_frames(slot, span)
+            if self._fused_eligible():
+                self._swap_scatter(slot, pf, record.frames, stats)
+            else:
+                for (kind, i, name), lines in record.frames.items():
+                    pool_leaf = self.caches[kind][i][name]
+                    lead = pool_leaf.shape[:-4]
+                    frames = jnp.asarray(lines).reshape(
+                        lead + (span,) + pool_leaf.shape[-2:])
+                    leaf = _install_pool_leaf(pool_leaf, frames,
+                                              self.pool.table[slot], span,
+                                              self.table.page_size)
+                    self._set_leaf(kind, i, name, leaf)
+        self._restore_unpaged(slot, record.unpaged)
+
+    def _phys_frames(self, slot: int, span: int) -> np.ndarray:
+        """Physical frame rows backing the slot's first ``span`` timesteps
+        (the page-table indirection, host-side)."""
+        ps = self.table.page_size
+        row = self.pool.table[slot]
+        t = np.arange(span)
+        return (row[t // ps].astype(np.int64) * ps + t % ps).astype(np.int32)
+
+    def _rep_idx(self, kind: str, i: int, pf: np.ndarray) -> np.ndarray:
+        """Physical frame rows ``pf`` rep-tiled across a leaf's lead dims —
+        the flattened-line addresses of one slot's frames in that leaf."""
+        pool_leaf = self.caches[kind][i]["k"]
+        frames_n = pool_leaf.shape[-4] * pool_leaf.shape[-3]
+        reps = int(np.prod(pool_leaf.shape[:-4])) if pool_leaf.ndim > 4 else 1
+        return (np.arange(reps, dtype=np.int64)[:, None] * frames_n
+                + pf[None, :]).reshape(-1).astype(np.int32)
+
+    def _swap_gather(self, slot: int, pf: np.ndarray, stats) -> Dict:
+        """Swap-out data path: every paged leaf's mapped frames as one
+        gather-indexed read stream (sentinel-padded to the port width)."""
+        n = self.fabric.n_ports
+        streams = {(kind, i, name): (self._rep_idx(kind, i, pf),
+                                     _flat_frames_lines(
+                                         self.caches[kind][i][name]))
+                   for kind, i in self.paged_entries for name in ("k", "v")}
+        expect = 0
+        for idx, src in streams.values():
+            expect ^= _parity_word(jnp.take(src, jnp.asarray(idx), axis=0))
+
+        def transfer():
+            sched = BurstScheduler(self.fabric, stats=stats)
+            for (kind, i, name), (idx, src) in streams.items():
+                pad = (-idx.shape[0]) % n
+                gidx = (np.concatenate(
+                    [idx, np.full((pad,), _SENTINEL, np.int32)])
+                    if pad else idx)
+                sched.enqueue_read(f"swap/{slot}/{kind}{i}/{name}", src,
+                                   gather=jnp.asarray(gidx))
+            out = sched.flush()
+            got = {}
+            for (kind, i, name), (idx, _) in streams.items():
+                lines = _banked_to_lines(out[f"swap/{slot}/{kind}{i}/{name}"])
+                got[(kind, i, name)] = np.asarray(lines[: idx.shape[0]])
+            return got, got
+
+        got = self._checked_transfer(transfer, expect, stats)
+        if stats is not None:
+            stats.swap_bursts += 1
+            stats.swap_out_words += sum(v.size for v in got.values())
+        return got
+
+    def _swap_scatter(self, slot: int, pf: np.ndarray, frames: Dict,
+                      stats) -> None:
+        """Swap-in data path: every paged leaf's saved frames as one
+        scatter-indexed write stream landing at the new physical rows."""
+        n = self.fabric.n_ports
+        expect = 0
+        for lines in frames.values():
+            expect ^= _parity_word(lines)
+
+        def transfer():
+            sched = BurstScheduler(self.fabric, stats=stats)
+            targets = {}
+            for (kind, i, name), lines in sorted(frames.items()):
+                idx = self._rep_idx(kind, i, pf)
+                ln = jnp.asarray(lines)
+                pad = (-idx.shape[0]) % n
+                sidx = idx
+                if pad:
+                    ln = jnp.pad(ln, ((0, pad), (0, 0), (0, 0)))
+                    sidx = np.concatenate(
+                        [idx, np.full((pad,), _SENTINEL, np.int32)])
+                pool_leaf = self.caches[kind][i][name]
+                tag = f"swap/{slot}/{kind}{i}/{name}"
+                sched.enqueue_write(tag, _lines_to_banked(ln, n),
+                                    scatter=jnp.asarray(sidx),
+                                    into=_flat_frames_lines(pool_leaf))
+                targets[tag] = (kind, i, name, pool_leaf.shape, idx)
+            out = sched.flush()
+            leaves, received = {}, {}
+            for tag, (kind, i, name, shape, idx) in targets.items():
+                received[tag] = np.asarray(jnp.take(
+                    out[tag], jnp.asarray(idx), axis=0))
+                leaves[tag] = (kind, i, name, out[tag].reshape(shape))
+            return leaves, received
+
+        leaves = self._checked_transfer(transfer, expect, stats)
+        for kind, i, name, leaf in leaves.values():
+            self._set_leaf(kind, i, name, leaf)
+        if stats is not None:
+            stats.swap_bursts += 1
+            stats.swap_in_words += sum(v.size for v in frames.values())
+
+    def _checked_transfer(self, transfer, expect: int, stats):
+        """Run a swap transfer under the end-to-end parity word: XOR of
+        every byte the receiver staged must match the sender's.  The
+        networks are exact, so only injected corruption trips it; a
+        mismatch discards the staged copy and retries once (the injector's
+        ordinal does not re-fire on the retry)."""
+        inj = self.fault_injector
+        for attempt in (0, 1):
+            payload, received = transfer()
+            if inj is not None and inj.corrupt_swap_burst(attempt):
+                key = sorted(received)[0]
+                bad = received[key].copy()
+                bad.view(np.uint8).flat[0] ^= 0xFF
+                received[key] = bad
+            parity = 0
+            for v in received.values():
+                parity ^= _parity_word(v)
+            if parity == expect:
+                return payload
+            if stats is not None:
+                stats.bursts_retried += 1
+        raise RuntimeError(
+            "swap transfer failed the parity check twice — giving up")
+
+    def _extract_unpaged(self, slot: int) -> Dict[str, np.ndarray]:
+        """Host copies of the slot's non-paged leaf slices (ring windows,
+        recurrent state) — the control-traffic half of the swap image."""
+        paged = set(self.paged_entries)
+        max_slots = self.max_slots
+        out: Dict[str, np.ndarray] = {}
+
+        def one(path, batch_leaf):
+            kind, i, name = _leaf_entry(path)
+            if (kind, i) not in paged or name not in ("k", "v"):
+                baxis = 1 if (batch_leaf.ndim >= 4
+                              and batch_leaf.shape[1] == max_slots) else 0
+                idx = [slice(None)] * batch_leaf.ndim
+                idx[baxis] = slice(slot, slot + 1)
+                out[jax.tree_util.keystr(path)] = np.asarray(
+                    batch_leaf[tuple(idx)])
+            return batch_leaf
+
+        jax.tree_util.tree_map_with_path(one, self.caches)
+        return out
+
+    def _restore_unpaged(self, slot: int, saved: Dict[str, np.ndarray]):
+        max_slots = self.max_slots
+
+        def one(path, batch_leaf):
+            key = jax.tree_util.keystr(path)
+            if key not in saved:
+                return batch_leaf
+            baxis = 1 if (batch_leaf.ndim >= 4
+                          and batch_leaf.shape[1] == max_slots) else 0
+            idx = [slice(None)] * batch_leaf.ndim
+            idx[baxis] = slice(slot, slot + 1)
+            return batch_leaf.at[tuple(idx)].set(jnp.asarray(saved[key]))
+
+        self.caches = jax.tree_util.tree_map_with_path(one, self.caches)
 
     # -- install paths ---------------------------------------------------------
     def _dense_splice(self, slot: int, req_cache, span: int) -> None:
@@ -568,6 +824,23 @@ def _lines_to_banked(lines: jax.Array, n: int) -> jax.Array:
     identity — the accelerator side holds port-major head streams and the
     write network reassembles the wide DRAM lines)."""
     return pm_to_banked(jnp.swapaxes(lines, 0, 1), n)    # [N, L, D] streams
+
+
+def _banked_to_lines(banked: jax.Array) -> jax.Array:
+    """Inverse relabel of :func:`_lines_to_banked`: the banked
+    ``[G, N, N, D]`` image a gather read returns, back as line-major frames
+    ``[G*N, N, D]`` in request order (sentinel pad rows land at the tail)."""
+    g, n, _, d = banked.shape
+    pm = banked.transpose(1, 0, 2, 3).reshape(n, g * n, d)
+    return jnp.swapaxes(pm, 0, 1)
+
+
+def _parity_word(arr) -> int:
+    """XOR of every byte — the end-to-end checksum on swap transfers."""
+    a = np.ascontiguousarray(np.asarray(arr))
+    if a.size == 0:
+        return 0
+    return int(np.bitwise_xor.reduce(a.view(np.uint8), axis=None))
 
 
 def _flat_frames_lines(pool_leaf: jax.Array) -> jax.Array:

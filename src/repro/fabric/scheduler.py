@@ -147,6 +147,18 @@ class SchedulerStats:
     ``words_cross_shard < words_moved`` is the locality win the sharded
     bench cells assert: with round-robin page striping roughly ``(S-1)/S``
     of the live traffic crosses, never all of it.
+
+    The graceful-degradation counters cover the serving engine's
+    oversubscription path: ``preemptions`` counts victim slots evicted so a
+    higher-priority request could run; ``swap_bursts``/``swap_out_words``/
+    ``swap_in_words`` count the ``swap/*`` sparse-extent streams that stage
+    a victim's live frames to host memory over the read network and restore
+    them over the write network (swap traffic is burst traffic — counted,
+    packed and bit-exact like every other stream); ``bursts_retried``
+    counts swap transfers re-run after an end-to-end parity-word mismatch
+    (injected corruption); ``faults_recovered`` counts engine steps that
+    rolled back to the last consistent state and replayed after an
+    injected mid-step failure.
     """
     streams_served: int = 0
     flushes: int = 0
@@ -160,6 +172,12 @@ class SchedulerStats:
     gather_fused_bursts: int = 0
     prefill_bursts: int = 0
     collective_calls: int = 0
+    preemptions: int = 0
+    swap_bursts: int = 0
+    swap_out_words: int = 0
+    swap_in_words: int = 0
+    bursts_retried: int = 0
+    faults_recovered: int = 0
 
     @property
     def calls_saved(self) -> int:

@@ -12,8 +12,14 @@ burst layout, ``--word-fold`` the machine-word lane folding cap,
 defaults to the shared physical page pool (``--paged-pool`` /
 ``--no-paged-pool``, ``--pool-pages`` sizes it): gather-based decode
 through the per-slot page table, admission installed as ``prefill/*``
-write-burst traffic, retirement reclaims pages.  On the medusa fabric with
-kernels enabled each burst lowers as one fused Pallas launch.
+write-burst traffic, retirement reclaims pages.  Under oversubscription the
+engine degrades gracefully instead of stalling: ``--priority-classes``
+spreads the synthetic load over priority classes, ``--preempt
+{swap,recompute,off}`` picks the victim policy (page-level swap over the
+fabric's ``swap/*`` streams, or drop + re-prefill), ``--swap-space-pages``
+caps the host swap space, and ``--check-pool`` runs the free-list
+conservation invariant every step.  On the medusa fabric with kernels
+enabled each burst lowers as one fused Pallas launch.
 """
 
 from __future__ import annotations
@@ -86,6 +92,25 @@ def main():
     ap.add_argument("--serve-fsdp", action="store_true",
                     help="stream ZeRO-1 sharded weights through the decode "
                          "step's read burst (weight_stream ports)")
+    ap.add_argument("--priority-classes", type=int, default=1,
+                    help="spread the synthetic requests over this many "
+                         "priority classes (request i gets priority "
+                         "i %% P); higher classes preempt lower when the "
+                         "pool is oversubscribed")
+    ap.add_argument("--preempt", default=None,
+                    choices=[None, "swap", "recompute", "off"],
+                    help="victim policy when a higher-priority request "
+                         "would otherwise wait: swap pages to host over "
+                         "the fabric (swap/* streams), drop + re-prefill, "
+                         "or off = the head-of-line gate (default: "
+                         "FabricConfig.preempt)")
+    ap.add_argument("--swap-space-pages", type=int, default=None,
+                    help="host swap-space cap in pages; evictions beyond "
+                         "it fall back to recompute (default: FabricConfig."
+                         "swap_space_pages, 0 = unbounded)")
+    ap.add_argument("--check-pool", action="store_true",
+                    help="run the pool's free-list conservation invariant "
+                         "after every engine step (debug)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -137,9 +162,13 @@ def main():
         eng = ServingEngine(cfg, params, max_slots=args.batch, t_max=t_max,
                             pool_pages=args.pool_pages,
                             pool_shards=args.pool_shards,
-                            collective=args.collective)
+                            collective=args.collective,
+                            preempt=args.preempt,
+                            swap_space_pages=args.swap_space_pages,
+                            check_pool=args.check_pool)
         prompts = np.asarray(batch["tokens"])
-        reqs = [Request(i, prompts[i], max_new_tokens=args.gen_len)
+        reqs = [Request(i, prompts[i], max_new_tokens=args.gen_len,
+                        priority=i % max(args.priority_classes, 1))
                 for i in range(args.batch)]
         for r in reqs:
             eng.submit(r)
@@ -160,6 +189,15 @@ def main():
                   f"{pool.pages_in_use} in use at exit; "
                   f"{kv.prefill_bursts} prefill write bursts, "
                   f"{kv.prefill_splices} splice fallbacks")
+            fs = eng.fabric_stats
+            print(f"preemption[{eng.preempt}]: {fs.preemptions} "
+                  f"preemptions; swap {pool.pages_swapped_out} pages out / "
+                  f"{pool.pages_swapped_in} back "
+                  f"({fs.swap_out_words} words out, {fs.swap_in_words} in "
+                  f"over {fs.swap_bursts} swap bursts); "
+                  f"{fs.bursts_retried} bursts retried, "
+                  f"{fs.faults_recovered} faults recovered, "
+                  f"{eng.slo_misses} SLO misses")
         else:
             print("page pool: off (dense per-slot reservation)")
         fs = eng.fabric_stats

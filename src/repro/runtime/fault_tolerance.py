@@ -45,16 +45,56 @@ class StragglerDetector:
 
 
 class FaultInjector:
-    """Deterministic fault schedule for tests/examples: fail at given steps."""
+    """Deterministic fault schedule for tests/examples.
 
-    def __init__(self, fail_at: tuple = ()):
+    Three fault classes, each fired at most once per scheduled occurrence:
+
+    * ``fail_at`` — raise mid-step (the training runner restores the latest
+      checkpoint; the serving engine rolls back to its pre-step snapshot
+      and replays the step — ``SchedulerStats.faults_recovered``);
+    * ``exhaust_pool_at`` — the serving engine's admission sees zero pool
+      headroom at these steps (a transient allocation failure: admission
+      backs off and retries next step);
+    * ``corrupt_swap`` — the n-th ``swap/*`` burst (0-indexed ordinal over
+      swap-out and swap-in transfers) is corrupted in flight on its first
+      attempt; the end-to-end parity word catches it and the transfer is
+      retried once (``SchedulerStats.bursts_retried``).
+    """
+
+    def __init__(self, fail_at: tuple = (), exhaust_pool_at: tuple = (),
+                 corrupt_swap: tuple = ()):
         self.fail_at = set(fail_at)
         self.fired = set()
+        self.exhaust_pool_at = set(exhaust_pool_at)
+        self.exhaust_fired = set()
+        self.corrupt_swap_at = set(corrupt_swap)
+        self._swap_ordinal = 0
+        self.corrupted = 0
 
     def check(self, step: int):
         if step in self.fail_at and step not in self.fired:
             self.fired.add(step)
             raise RuntimeError(f"injected node failure at step {step}")
+
+    def pool_exhausted(self, step: int) -> bool:
+        """Whether admission at ``step`` should see an exhausted pool."""
+        if step in self.exhaust_pool_at and step not in self.exhaust_fired:
+            self.exhaust_fired.add(step)
+            return True
+        return False
+
+    def corrupt_swap_burst(self, attempt: int) -> bool:
+        """Consulted once per swap-transfer attempt.  The transfer ordinal
+        advances on the first attempt only, so a retry of a corrupted
+        transfer sees a clean channel."""
+        if attempt:
+            return False
+        k = self._swap_ordinal
+        self._swap_ordinal += 1
+        if k in self.corrupt_swap_at:
+            self.corrupted += 1
+            return True
+        return False
 
 
 class TrainingRunner:

@@ -40,6 +40,25 @@ instead of pool capacity (``fabric_stats.words_live`` /
 ``.gather_fused_bursts``); the gather-after-burst form stays as the
 fallback (``fused_gather=False``) and the bit-parity reference.
 
+**Graceful degradation under oversubscription** (``FabricConfig.preempt``):
+requests carry priority classes and optional SLO deadlines, and when a
+higher-priority request would otherwise wait on a full pool the engine
+preempts live slots — victims picked lowest-priority first, then
+most-pages, then LRU — and parks them in a host swap space.  Eviction and
+re-admission are fabric traffic like everything else: ``swap/<slot>/*``
+sparse-extent streams ride the read network's fused page-table gather out
+and the write network's scatter back in
+(:meth:`repro.fabric.PagedKVCache.swap_out` / ``swap_in``), parity-checked
+end to end, so a preempted request resumes bit-identically.  The vLLM-style
+swap-vs-recompute choice (``preempt="recompute"``, or automatically when
+the swap space is full or nothing was decoded yet) drops the pages and
+re-prefills the sequence so far instead.  Swapped requests re-admit ahead
+of the queue.  A :class:`repro.runtime.fault_tolerance.FaultInjector`
+plugs into the same path: injected pool exhaustion backs admission off a
+step, corrupted swap bursts are caught by the parity word and retried, and
+a mid-step failure rolls the engine back to its pre-step snapshot and
+replays (``fabric_stats.faults_recovered``).
+
 Decoder-only families (dense/moe/ssm/hybrid/vlm); greedy sampling.
 """
 
@@ -47,7 +66,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -55,7 +74,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.fabric import (BurstScheduler, Fabric, PagedKVCache,
-                          SchedulerStats, make_pool_mesh, shard_plan)
+                          SchedulerStats, SwapRecord, make_pool_mesh,
+                          shard_plan)
 from repro.models import api
 from repro.models import common as cm
 from repro.models import lm
@@ -69,13 +89,28 @@ def _lead_prod(flat) -> int:
     return reps
 
 
-@dataclasses.dataclass
-class Request:
+@dataclasses.dataclass(eq=False)           # identity equality: the prompt
+class Request:                             # array makes field-eq ambiguous
     rid: int
     prompt: np.ndarray                     # [prompt_len] int32
     max_new_tokens: int
+    priority: int = 0                      # higher preempts strictly lower
+    deadline: Optional[int] = None         # SLO: retire by this engine step
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    _seq: int = dataclasses.field(default=0, repr=False)   # submit order
+
+
+@dataclasses.dataclass
+class _Swapped:
+    """A preempted request parked in the host swap space.  ``record`` is
+    the fabric-staged KV image (swap arm) or ``None`` (recompute arm:
+    re-admission re-prefills ``prompt + generated[:-1]``)."""
+
+    req: Request
+    record: Optional[SwapRecord]
+    pos: int                               # next write position at eviction
+    token: int                             # the pending decode token
 
 
 class ServingEngine:
@@ -83,7 +118,10 @@ class ServingEngine:
                  page_size: int = 0, paged_pool: Optional[bool] = None,
                  pool_pages: int = 0, prefill_burst: Optional[bool] = None,
                  fused_gather: Optional[bool] = None, pool_shards: int = 0,
-                 collective: Optional[str] = None):
+                 collective: Optional[str] = None,
+                 preempt: Optional[str] = None,
+                 swap_space_pages: Optional[int] = None,
+                 check_pool: bool = False, fault_injector=None):
         assert cfg.family != "audio", "engine covers decoder-only families"
         self.cfg = cfg
         self.params = params
@@ -169,6 +207,28 @@ class ServingEngine:
         # (prompt + generation) — admission is the only allocation gate, so
         # decode growth can never exhaust the pool mid-flight
         self._page_reserve: dict = {}
+        # preemption policy (FabricConfig.preempt): "swap" parks victims in
+        # the host swap space over the fabric, "recompute" drops their pages
+        # and re-prefills on re-admission, "off" is the seed head-of-line
+        # gate.  Needs the page pool — dense reservations have nothing to
+        # reclaim mid-flight.
+        pre = fab_cfg.preempt if preempt is None else preempt
+        if pre not in ("swap", "recompute", "off"):
+            raise ValueError(f"preempt must be 'swap', 'recompute' or "
+                             f"'off', got {pre!r}")
+        self.preempt = pre if self.paged else "off"
+        self.swap_space_pages = (fab_cfg.swap_space_pages
+                                 if swap_space_pages is None
+                                 else swap_space_pages)
+        self.check_pool = check_pool
+        self.fault_injector = fault_injector
+        self.kv.fault_injector = fault_injector
+        self._swapped: Dict[int, _Swapped] = {}      # rid → parked request
+        self._admitted_at: dict = {}                 # slot → admission step
+        self._swap_pages_used = 0
+        self._submit_seq = 0
+        self._step_count = 0
+        self.slo_misses = 0
 
         # one scheduler instance per decode step: per-step KV banking (and
         # the serve_fsdp weight stream) runs as one read + one write network
@@ -214,29 +274,114 @@ class ServingEngine:
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request) -> None:
+        """Enqueue a request, rejecting what could never run: a prompt the
+        cache can't hold, or — in pool mode — a reserved reach larger than
+        the whole pool (it would gate the head of the queue forever)."""
+        if len(req.prompt) + 1 > self.t_max:
+            raise ValueError(
+                f"request {req.rid}: prompt of {len(req.prompt)} tokens "
+                f"cannot decode within t_max={self.t_max}")
+        if self.kv.paged:
+            reach = min(len(req.prompt) + req.max_new_tokens, self.t_max)
+            need = self.kv.table.pages_for(reach)
+            if need > self.kv.pool.n_pages:
+                raise ValueError(
+                    f"request {req.rid}: reach of {reach} tokens reserves "
+                    f"{need} pages but the pool holds {self.kv.pool.n_pages}"
+                    f" — it would block the queue forever")
+        req._seq = self._submit_seq
+        self._submit_seq += 1
         self.queue.append(req)
 
+    def _rank(self, req: Request):
+        """Admission order: priority class first, earliest SLO deadline
+        next, submit order last (FIFO within a class — uniform priorities
+        reduce to the seed's queue order exactly)."""
+        dl = float("inf") if req.deadline is None else req.deadline
+        return (-req.priority, dl, req._seq)
+
+    def _candidates(self) -> list:
+        """Admissible work, best first.  Swapped requests re-admit ahead of
+        everything still queued in their priority class — their submit
+        stamp predates it (their pages were taken, not their turn) — but a
+        higher class still outranks them, so a parked victim can never
+        head-of-line-block the very traffic that preempted it."""
+        cands = list(self._swapped.values()) + list(self.queue)
+        return sorted(cands, key=lambda c: self._rank(
+            c.req if isinstance(c, _Swapped) else c))
+
     def _admit(self) -> None:
-        """Fill free slots from the queue: prefill each prompt, then install
-        the whole wave's page-aligned KV extents through ONE write-network
-        flush (``prefill/*`` streams — ``fabric_stats.prefill_bursts``),
-        with the per-layer splice as the off-geometry fallback.  Pool mode
-        gates admission on free pages (head-of-line; retirement reclaims)."""
-        wave = []
-        for slot in range(self.max_slots):
-            if self.active[slot] is not None or not self.queue:
-                continue
+        """Fill slots from the swap space and the queue in priority order:
+        prefill each prompt, then install the whole wave's page-aligned KV
+        extents through ONE write-network flush (``prefill/*`` streams —
+        ``fabric_stats.prefill_bursts``), with the per-layer splice as the
+        off-geometry fallback; swap-ins restore eagerly (one ``swap/*``
+        flush per slot).  Pool mode gates on free pages (head-of-line
+        within the priority order; retirement reclaims) — and when the best
+        candidate outranks live work, preempts victims instead of waiting
+        (:meth:`_make_room`).  An injected pool-exhaustion fault backs the
+        whole wave off for the step."""
+        if (self.kv.paged and self.fault_injector is not None
+                and self.fault_injector.pool_exhausted(self._step_count)):
+            return
+        wave: list = []
+        protected: set = set()         # slots filled this wave — not victims
+        while True:
+            cands = self._candidates()
+            if not cands:
+                break
+            cand = cands[0]
+            req = cand.req if isinstance(cand, _Swapped) else cand
+            free = [s for s in range(self.max_slots)
+                    if self.active[s] is None]
             if self.kv.paged:
                 # reserve the request's full reach (prompt + generation,
                 # capped by the cache depth) so decode growth can never
                 # exhaust the pool mid-flight — admission is the only gate
-                nxt = self.queue[0]
-                reach = min(len(nxt.prompt) + nxt.max_new_tokens, self.t_max)
+                reach = min(len(req.prompt) + req.max_new_tokens, self.t_max)
                 need = self.kv.table.pages_for(reach)
-                if self._pool_headroom() < need:
-                    break                # wait for pages to be reclaimed
-                self._page_reserve[slot] = need
-            req = self.queue.pop(0)
+                if not free or self._pool_headroom() < need:
+                    if not self._make_room(req, need, protected,
+                                           have_slot=bool(free)):
+                        break        # wait for pages to be reclaimed
+                    free = [s for s in range(self.max_slots)
+                            if self.active[s] is None]
+                self._page_reserve[free[0]] = need
+            elif not free:
+                break
+            slot = free[0]
+            protected.add(slot)
+            self._install(cand, slot, wave)
+        if wave:
+            self.kv.admit_wave(wave, stats=self.fabric_stats,
+                               burst=self.prefill_burst)
+
+    def _install(self, cand, slot: int, wave: list) -> None:
+        """Land one candidate in ``slot``: fresh requests prefill into the
+        wave; swapped requests either restore over the fabric (swap arm) or
+        re-prefill everything decoded so far (recompute arm) — both resume
+        the exact pre-eviction state (cache = ``prompt + generated[:-1]``,
+        the last token still pending decode)."""
+        if isinstance(cand, _Swapped):
+            req = cand.req
+            del self._swapped[req.rid]
+            self.active[slot] = req
+            self.pos[slot] = cand.pos
+            self.tokens[slot, 0] = cand.token
+            if cand.record is not None:
+                self.kv.swap_in(slot, cand.record, stats=self.fabric_stats)
+                self._swap_pages_used -= cand.record.mapped
+            else:
+                full = np.concatenate([np.asarray(req.prompt, np.int32),
+                                       np.asarray(req.generated[:-1],
+                                                  np.int32)])
+                _, req_cache = api.prefill_fn(
+                    self.params, {"tokens": jnp.asarray(full)[None, :]},
+                    self.cfg, self.t_alloc)
+                wave.append((slot, req_cache, len(full)))
+        else:
+            req = cand
+            self.queue.remove(req)
             prompt = jnp.asarray(req.prompt)[None, :]
             logits, req_cache = api.prefill_fn(
                 self.params, {"tokens": prompt}, self.cfg, self.t_alloc)
@@ -247,9 +392,66 @@ class ServingEngine:
             first = int(np.argmax(np.asarray(logits[0, -1])))
             req.generated.append(first)
             self.tokens[slot, 0] = first
-        if wave:
-            self.kv.admit_wave(wave, stats=self.fabric_stats,
-                               burst=self.prefill_burst)
+        self._admitted_at[slot] = self._step_count
+
+    # -- preemption ----------------------------------------------------------
+    def _make_room(self, req: Request, need: int, protected: set,
+                   have_slot: bool) -> bool:
+        """Evict strictly-lower-priority live slots until ``req`` has a
+        slot and ``need`` pages of headroom.  Victim order: lowest priority
+        first, then most mapped pages (fewest evictions), then oldest
+        admission (LRU).  All-or-nothing: if even every eligible victim
+        wouldn't make room, nothing is evicted."""
+        if self.preempt == "off":
+            return False
+        victims = [s for s in range(self.max_slots)
+                   if self.active[s] is not None and s not in protected
+                   and self.active[s].priority < req.priority]
+        victims.sort(key=lambda s: (self.active[s].priority,
+                                    -self.kv.pool.mapped(s),
+                                    self._admitted_at.get(s, 0)))
+        headroom = self._pool_headroom()
+        chosen = []
+        for s in victims:
+            if have_slot and headroom >= need:
+                break
+            # freeing s returns its mapped pages AND retires its reserve
+            headroom += max(self.kv.pool.mapped(s),
+                            self._page_reserve.get(s, 0))
+            have_slot = True
+            chosen.append(s)
+        if not (have_slot and headroom >= need):
+            return False
+        for s in chosen:
+            self._preempt_slot(s)
+        return True
+
+    def _preempt_slot(self, slot: int) -> None:
+        """Evict one live slot.  Swap arm: stage its KV image out over the
+        fabric (``swap/*`` gather streams) into the host swap space.
+        Recompute arm — chosen by config, when the swap-space cap is
+        reached, or when nothing has been decoded yet (re-prefilling the
+        prompt is the same work with no swap-space cost) — just drops the
+        pages."""
+        req = self.active[slot]
+        use_swap = self.preempt == "swap" and len(req.generated) > 1
+        if use_swap and self.swap_space_pages:
+            if (self._swap_pages_used + self.kv.pool.mapped(slot)
+                    > self.swap_space_pages):
+                use_swap = False
+        if use_swap:
+            record = self.kv.swap_out(slot, stats=self.fabric_stats)
+            self._swap_pages_used += record.mapped
+        else:
+            record = None
+            self.kv.free(slot)
+        self._swapped[req.rid] = _Swapped(
+            req=req, record=record, pos=int(self.pos[slot]),
+            token=int(self.tokens[slot, 0]))
+        self.active[slot] = None
+        self._page_reserve.pop(slot, None)
+        self._admitted_at.pop(slot, None)
+        self.fabric_stats.preemptions += 1
 
     def _pool_headroom(self) -> int:
         """Free pages not spoken for by live slots' unexpanded reaches."""
@@ -259,8 +461,33 @@ class ServingEngine:
 
     # -- one engine step -----------------------------------------------------
     def step(self) -> int:
-        """Admit + one batched decode step; returns #active sequences."""
+        """Admit + one batched decode step; returns #active sequences.
+
+        With a fault injector attached, the engine snapshots its full state
+        before the step; an injected mid-step failure rolls back to that
+        snapshot and replays the step (``fabric_stats.faults_recovered``) —
+        the replay is deterministic, so recovery is bit-exact.  With
+        ``check_pool`` the free-list conservation invariant runs after
+        every step."""
+        step_no = self._step_count
+        snap = self._snapshot() if self.fault_injector is not None else None
+        try:
+            n_live = self._step_inner(step_no)
+        except RuntimeError:
+            if snap is None:
+                raise
+            self._restore(snap)
+            self.fabric_stats.faults_recovered += 1
+            n_live = self._step_inner(step_no)
+        self._step_count = step_no + 1
+        if self.check_pool and self.kv.paged:
+            self.kv.pool.check()
+        return n_live
+
+    def _step_inner(self, step_no: int) -> int:
         self._admit()
+        if self.fault_injector is not None:
+            self.fault_injector.check(step_no)     # mid-step failure seam
         live = [s for s in range(self.max_slots) if self.active[s] is not None]
         if not live:
             return 0
@@ -302,16 +529,98 @@ class ServingEngine:
             if (len(req.generated) >= req.max_new_tokens
                     or self.pos[s] + 1 >= self.t_max):
                 req.done = True
+                if req.deadline is not None and step_no > req.deadline:
+                    self.slo_misses += 1
                 self.active[s] = None
                 # return the slot's pages (true reclamation in pool mode);
                 # stale frames are masked by the per-slot positions and
                 # overwritten on the next admission
                 self.kv.free(s)
                 self._page_reserve.pop(s, None)
+                self._admitted_at.pop(s, None)
         return len([s for s in range(self.max_slots)
                     if self.active[s] is not None])
 
     def run_to_completion(self, max_steps: int = 10_000) -> None:
+        """Step until every submitted request retires.  Raises — rather
+        than silently returning with work stranded — when ``max_steps``
+        runs out first."""
         for _ in range(max_steps):
-            if self.step() == 0 and not self.queue:
+            if self.step() == 0 and not self.queue and not self._swapped:
                 return
+        pending = (sum(r is not None for r in self.active) + len(self.queue)
+                   + len(self._swapped))
+        raise RuntimeError(
+            f"run_to_completion: {max_steps} steps exhausted with {pending} "
+            f"requests still pending (live + queued + swapped) — the "
+            f"workload does not fit, or admission is starved")
+
+    # -- fault recovery ------------------------------------------------------
+    def _snapshot(self) -> dict:
+        """The engine's full pre-step state.  Device arrays are immutable
+        (the cache pytree is captured by reference); host state — request
+        bookkeeping, page table, free lists, counters — is copied.  Request
+        objects are shared with the caller, so only their mutable tail
+        (``generated`` length, ``done``) is recorded."""
+        reqs = [(r, len(r.generated), r.done) for r in
+                (list(self.queue) + [w.req for w in self._swapped.values()]
+                 + [r for r in self.active if r is not None])]
+        pool = self.kv.pool
+        return dict(
+            caches=self.kv.caches,
+            pos=self.pos.copy(), tokens=self.tokens.copy(),
+            active=list(self.active), queue=list(self.queue),
+            swapped=dict(self._swapped),
+            reserve=dict(self._page_reserve),
+            admitted=dict(self._admitted_at),
+            swap_used=self._swap_pages_used,
+            submit_seq=self._submit_seq,
+            slo=self.slo_misses,
+            last_logits=self.last_logits,
+            table_used=self.kv.table.used.copy(),
+            dirty=self.kv._dirty.copy(),
+            kv_counters=(self.kv.tokens_moved, self.kv.tokens_moved_dense,
+                         self.kv.prefill_bursts, self.kv.prefill_splices),
+            pool=None if pool is None else (
+                pool.table.copy(),
+                [list(s) for s in pool._free_by_shard], pool._rr,
+                pool.pages_allocated, pool.pages_reclaimed,
+                pool.pages_swapped_out, pool.pages_swapped_in),
+            stats=dataclasses.replace(self.fabric_stats),
+            reqs=reqs)
+
+    def _restore(self, snap: dict) -> None:
+        """Roll back to the pre-step snapshot (restore-from-last-consistent-
+        state).  ``fabric_stats`` is restored field-in-place — the jitted
+        step closed over the instance, so its identity must survive."""
+        self.kv.update(snap["caches"])
+        self.pos[:] = snap["pos"]
+        self.tokens[:] = snap["tokens"]
+        self.active = snap["active"]
+        self.queue = snap["queue"]
+        self._swapped = snap["swapped"]
+        self._page_reserve = snap["reserve"]
+        self._admitted_at = snap["admitted"]
+        self._swap_pages_used = snap["swap_used"]
+        self._submit_seq = snap["submit_seq"]
+        self.slo_misses = snap["slo"]
+        self.last_logits = snap["last_logits"]
+        self.kv.table.used[:] = snap["table_used"]
+        self.kv._dirty[:] = snap["dirty"]
+        (self.kv.tokens_moved, self.kv.tokens_moved_dense,
+         self.kv.prefill_bursts, self.kv.prefill_splices) = snap["kv_counters"]
+        if snap["pool"] is not None:
+            pool = self.kv.pool
+            (table, free, rr, alloc, reclaimed, s_out, s_in) = snap["pool"]
+            pool.table[:] = table
+            pool._free_by_shard = [list(s) for s in free]
+            pool._rr = rr
+            pool.pages_allocated = alloc
+            pool.pages_reclaimed = reclaimed
+            pool.pages_swapped_out = s_out
+            pool.pages_swapped_in = s_in
+        for f in dataclasses.fields(SchedulerStats):
+            setattr(self.fabric_stats, f.name, getattr(snap["stats"], f.name))
+        for r, n_gen, done in snap["reqs"]:
+            del r.generated[n_gen:]
+            r.done = done

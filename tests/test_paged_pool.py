@@ -64,8 +64,11 @@ def _drive(cfg, arrivals, *, paged_pool, max_slots=2, t_max=24, page_size=4,
     """Run an engine over scripted ``(arrival_step, prompt_len, max_new)``
     requests; returns (generated per request, per-step live-slot logits,
     per-step live sets, engine).  Pool invariants are checked every step."""
+    # check_pool: the conservation invariant runs inside every step (the
+    # --check-pool debug flag, default on in tests)
     eng = ServingEngine(cfg, _params(cfg), max_slots=max_slots, t_max=t_max,
-                        page_size=page_size, paged_pool=paged_pool, **eng_kw)
+                        page_size=page_size, paged_pool=paged_pool,
+                        check_pool=True, **eng_kw)
     pending = sorted(enumerate(arrivals), key=lambda a: a[1][0])
     reqs = []
     logs, lives = [], []

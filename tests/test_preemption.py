@@ -1,0 +1,325 @@
+"""Graceful degradation under oversubscription: page-level swap, priority
+preemption, and fault-injected serving.
+
+The acceptance bar:
+
+* an oversubscribed churn run (queued demand ≥ 2× pool pages, mixed
+  priority classes) completes with every request's generated tokens
+  **bit-identical** to an unconstrained-pool reference run — for both the
+  swap arm (``swap/*`` fabric streams, ``preemptions > 0``, swap words in
+  ``SchedulerStats``) and the recompute arm (pages dropped, the sequence so
+  far re-prefilled);
+* a high-priority request lands within a couple of steps of arrival even
+  when lower-priority work holds every page (no priority inversion — not
+  even through the swap space);
+* injected faults — mid-step failure (snapshot/replay), corrupted swap
+  bursts (parity-checked, retried once), transient pool exhaustion — all
+  recover with zero output divergence;
+* requests that could never run are rejected at ``submit()``, and
+  ``run_to_completion`` raises instead of silently stranding work.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.fabric import PagePool
+from repro.kernels import ops
+from repro.models import api
+from repro.runtime.fault_tolerance import FaultInjector
+from repro.serving import Request, ServingEngine
+
+from tests.hypothesis_compat import given, settings, st
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _cfg():
+    return dataclasses.replace(get_smoke("starcoder2-15b"), dtype="float32")
+
+
+_PARAMS = {}
+
+
+def _params(cfg):
+    if cfg.name not in _PARAMS:
+        _PARAMS[cfg.name] = api.init_params(cfg, KEY)
+    return _PARAMS[cfg.name]
+
+
+def _prompt(rid: int, length: int, vocab: int) -> np.ndarray:
+    return np.asarray(jax.random.randint(jax.random.fold_in(KEY, 1000 + rid),
+                                         (length,), 0, vocab), np.int32)
+
+
+# (arrival_step, prompt_len, max_new_tokens, priority): two long-running
+# low-priority requests saturate a 7-page pool (reach 16 tokens = 4 pages
+# each), then higher classes arrive — queued demand is ≥ 2× the pool.
+SPEC = [(0, 7, 8, 0), (0, 8, 8, 0), (2, 9, 6, 2), (3, 7, 6, 1), (4, 6, 6, 2)]
+POOL = 7
+
+
+def _run(cfg, spec, *, pool_pages, preempt, max_slots=2, t_max=24,
+         page_size=4, max_steps=300, inj=None, **eng_kw):
+    """Drive scripted arrivals to completion; returns (requests, engine)."""
+    eng = ServingEngine(cfg, _params(cfg), max_slots=max_slots, t_max=t_max,
+                        page_size=page_size, pool_pages=pool_pages,
+                        preempt=preempt, check_pool=True, fault_injector=inj,
+                        **eng_kw)
+    reqs = [Request(i, _prompt(i, pl, cfg.vocab_size), max_new_tokens=mn,
+                    priority=p)
+            for i, (_, pl, mn, p) in enumerate(spec)]
+    pend = sorted(range(len(spec)), key=lambda i: spec[i][0])
+    for step in range(max_steps):
+        while pend and spec[pend[0]][0] <= step:
+            eng.submit(reqs[pend.pop(0)])
+        if (eng.step() == 0 and not eng.queue and not eng._swapped
+                and not pend):
+            break
+    assert all(r.done for r in reqs), "driver ran out of steps"
+    return reqs, eng
+
+
+def _reference(cfg, spec, **kw):
+    """Unconstrained run: default-size pool, a slot per request, preemption
+    off — the bit-parity oracle every degraded run must match."""
+    reqs, _ = _run(cfg, spec, pool_pages=0, preempt="off",
+                   max_slots=len(spec), **kw)
+    return [r.generated for r in reqs]
+
+
+def _assert_parity(reqs, ref):
+    for r, want in zip(reqs, ref):
+        assert r.generated == want, (r.rid, r.generated, want)
+
+
+# ---------------------------------------------------------------------------
+# PagePool swap space (unit level)
+# ---------------------------------------------------------------------------
+
+def test_pool_swap_counters_and_conservation():
+    pool = PagePool(page_size=4, n_pages=6, pages_per_slot=4, n_slots=3)
+    pool.ensure(0, 3)
+    pool.ensure(1, 2)
+    freed = pool.swap_out(0)
+    assert freed == 3 and pool.pages_swapped_out == 3
+    assert pool.mapped(0) == 0 and pool.free_pages == 4
+    pool.check()                       # release-based: counters balance
+    new = pool.swap_in(0, 3)
+    assert len(new) == 3 and pool.pages_swapped_in == 3
+    assert pool.mapped(0) == 3
+    pool.check()
+    # swap-in competes with ensure like any allocation: exhaustion raises
+    pool.ensure(2, 1)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.swap_in(1, 3)
+
+
+# ---------------------------------------------------------------------------
+# submit() rejection + run_to_completion stall (the livelock bugfix)
+# ---------------------------------------------------------------------------
+
+def test_submit_rejects_reach_beyond_pool():
+    ops.use_kernels(False)
+    cfg = _cfg()
+    eng = ServingEngine(cfg, _params(cfg), max_slots=2, t_max=24,
+                        page_size=4, pool_pages=2)
+    ok = Request(0, _prompt(0, 5, cfg.vocab_size), max_new_tokens=2)
+    eng.submit(ok)                     # reach 7 → 2 pages: fits exactly
+    with pytest.raises(ValueError, match="block the queue forever"):
+        eng.submit(Request(1, _prompt(1, 9, cfg.vocab_size),
+                           max_new_tokens=8))     # reach 17 → 5 pages
+
+
+def test_submit_rejects_prompt_beyond_t_max():
+    ops.use_kernels(False)
+    cfg = _cfg()
+    eng = ServingEngine(cfg, _params(cfg), max_slots=2, t_max=16, page_size=4)
+    with pytest.raises(ValueError, match="cannot decode"):
+        eng.submit(Request(0, _prompt(0, 16, cfg.vocab_size),
+                           max_new_tokens=1))
+
+
+def test_run_to_completion_raises_on_exhausted_steps():
+    ops.use_kernels(False)
+    cfg = _cfg()
+    eng = ServingEngine(cfg, _params(cfg), max_slots=1, t_max=24, page_size=4)
+    eng.submit(Request(0, _prompt(0, 5, cfg.vocab_size), max_new_tokens=6))
+    with pytest.raises(RuntimeError, match="steps exhausted"):
+        eng.run_to_completion(max_steps=2)
+    eng.run_to_completion(max_steps=32)           # and then it can finish
+
+
+# ---------------------------------------------------------------------------
+# oversubscribed churn: bit-parity under preemption
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ("swap", "recompute"))
+def test_oversubscribed_churn_bit_identical(mode):
+    """Demand ≥ 2× pool pages, mixed priorities: every request's tokens
+    match the unconstrained reference bit-for-bit, preemption actually
+    fired, and — swap arm — the ``swap/*`` traffic shows in the stats."""
+    ops.use_kernels(False)
+    cfg = _cfg()
+    ref = _reference(cfg, SPEC)
+    reqs, eng = _run(cfg, SPEC, pool_pages=POOL, preempt=mode)
+    _assert_parity(reqs, ref)
+    st = eng.fabric_stats
+    assert st.preemptions > 0
+    if mode == "swap":
+        assert st.swap_bursts > 0
+        assert st.swap_out_words > 0 and st.swap_in_words > 0
+        assert eng.kv.pool.pages_swapped_out > 0
+        assert eng.kv.pool.pages_swapped_in == eng.kv.pool.pages_swapped_out
+    else:
+        assert st.swap_out_words == 0 and st.swap_in_words == 0
+    # everything retired: full reclamation, empty swap space
+    assert eng.kv.pool.pages_in_use == 0
+    assert eng._swap_pages_used == 0 and not eng._swapped
+
+
+def test_preempt_off_blocks_head_of_line():
+    """The seed gate survives as ``preempt="off"``: same parity bar, no
+    preemption — admission just waits for reclamation."""
+    ops.use_kernels(False)
+    cfg = _cfg()
+    ref = _reference(cfg, SPEC)
+    reqs, eng = _run(cfg, SPEC, pool_pages=POOL, preempt="off")
+    _assert_parity(reqs, ref)
+    assert eng.fabric_stats.preemptions == 0
+
+
+def test_swap_space_cap_falls_back_to_recompute():
+    """A full swap space (``swap_space_pages``) downgrades eviction to the
+    recompute arm instead of failing — same parity bar."""
+    ops.use_kernels(False)
+    cfg = _cfg()
+    ref = _reference(cfg, SPEC)
+    reqs, eng = _run(cfg, SPEC, pool_pages=POOL, preempt="swap",
+                     swap_space_pages=3)
+    _assert_parity(reqs, ref)
+    assert eng.fabric_stats.preemptions > 0
+    assert eng.kv.pool.pages_swapped_out <= 3
+
+
+def test_priority_inversion_regression():
+    """A high-priority arrival lands within K steps even though
+    lower-priority work holds every page — the victim policy evicts
+    (lowest class, most pages, LRU) instead of queueing behind it."""
+    ops.use_kernels(False)
+    cfg = _cfg()
+    # pool of 8 = exactly two low-priority reaches (4 pages each): both
+    # slots fill, zero headroom — the high arrival MUST evict to land
+    eng = ServingEngine(cfg, _params(cfg), max_slots=2, t_max=24,
+                        page_size=4, pool_pages=8, preempt="swap",
+                        check_pool=True)
+    for i in range(3):                 # low-priority: fills slots AND queue
+        eng.submit(Request(i, _prompt(i, 8, cfg.vocab_size),
+                           max_new_tokens=8, priority=0))
+    for _ in range(3):
+        eng.step()
+    hi = Request(99, _prompt(99, 6, cfg.vocab_size), max_new_tokens=4,
+                 priority=5)
+    eng.submit(hi)
+    K = 2
+    for _ in range(K):
+        eng.step()
+        if hi in eng.active:
+            break
+    assert hi in eng.active, "high-priority request not admitted within K"
+    assert eng.fabric_stats.preemptions > 0
+    eng.run_to_completion(max_steps=200)
+    assert hi.done
+
+
+# ---------------------------------------------------------------------------
+# fault injection: recovery without divergence
+# ---------------------------------------------------------------------------
+
+def test_midstep_fault_recovers_bit_identical():
+    """An injected mid-step failure rolls back to the pre-step snapshot and
+    replays — admission, preemption, pool state and request tails all
+    restore, and the outputs match the fault-free reference."""
+    ops.use_kernels(False)
+    cfg = _cfg()
+    ref = _reference(cfg, SPEC)
+    inj = FaultInjector(fail_at=(3,))
+    reqs, eng = _run(cfg, SPEC, pool_pages=POOL, preempt="swap", inj=inj)
+    _assert_parity(reqs, ref)
+    assert eng.fabric_stats.faults_recovered == 1
+    assert inj.fired == {3}
+
+
+def test_corrupted_swap_burst_retried_to_parity():
+    """In-flight corruption of a swap burst trips the end-to-end parity
+    word; the transfer retries once on a clean channel and the run stays
+    bit-identical."""
+    ops.use_kernels(False)
+    cfg = _cfg()
+    ref = _reference(cfg, SPEC)
+    inj = FaultInjector(corrupt_swap=(0,))
+    reqs, eng = _run(cfg, SPEC, pool_pages=POOL, preempt="swap", inj=inj)
+    _assert_parity(reqs, ref)
+    assert inj.corrupted == 1
+    assert eng.fabric_stats.bursts_retried >= 1
+
+
+def test_injected_pool_exhaustion_backs_off():
+    """Transient allocation failure: admission sees zero headroom for the
+    scheduled steps, backs off, and the workload still completes to
+    parity."""
+    ops.use_kernels(False)
+    cfg = _cfg()
+    ref = _reference(cfg, SPEC)
+    inj = FaultInjector(exhaust_pool_at=(1, 2, 5))
+    reqs, eng = _run(cfg, SPEC, pool_pages=POOL, preempt="swap", inj=inj)
+    _assert_parity(reqs, ref)
+    assert inj.exhaust_fired == {1, 2, 5}
+
+
+def test_combined_faults_recover():
+    ops.use_kernels(False)
+    cfg = _cfg()
+    ref = _reference(cfg, SPEC)
+    inj = FaultInjector(fail_at=(2, 6), corrupt_swap=(1,),
+                        exhaust_pool_at=(4,))
+    reqs, eng = _run(cfg, SPEC, pool_pages=POOL, preempt="swap", inj=inj)
+    _assert_parity(reqs, ref)
+    assert eng.fabric_stats.faults_recovered == 2
+    assert eng.fabric_stats.bursts_retried >= 1
+
+
+# ---------------------------------------------------------------------------
+# nightly churn sweep: preemption on/off × swap/recompute
+# ---------------------------------------------------------------------------
+
+_SWEEP = st.lists(
+    st.tuples(st.integers(0, 5), st.integers(1, 11), st.integers(1, 5),
+              st.integers(0, 2)),
+    min_size=2, max_size=6)
+
+
+@pytest.mark.slow
+@settings(max_examples=20, deadline=None)
+@given(spec=_SWEEP, mode=st.sampled_from(["off", "swap", "recompute"]),
+       page_size=st.sampled_from([2, 4, 8]))
+def test_property_preemption_churn_parity(spec, mode, page_size):
+    """Random arrivals × priority classes × preemption policy (the nightly
+    axis): always bit-identical to the unconstrained reference, always full
+    reclamation.  The pool is sized for one worst-case reach (len 11 + 5
+    new against t_max 24) so progress is guaranteed even with preemption
+    off."""
+    ops.use_kernels(False)
+    cfg = _cfg()
+    ref = _reference(cfg, spec)
+    pool_pages = -(-16 // page_size)
+    reqs, eng = _run(cfg, spec, pool_pages=pool_pages, preempt=mode,
+                     page_size=page_size, max_steps=600)
+    _assert_parity(reqs, ref)
+    assert eng.kv.pool.pages_in_use == 0
+    assert eng._swap_pages_used == 0 and not eng._swapped
+    if mode == "off":
+        assert eng.fabric_stats.preemptions == 0
