@@ -59,6 +59,23 @@ Host platforms re-exec these cells in a subprocess under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (device count is
 frozen at first jax import).
 
+MoE dispatch cell family (``moe_dispatch_{route,burst}``): one MoE layer's
+token→expert dispatch + combine (``repro.models.moe.moe_apply``) with the
+data-dependent movement as bare ``fabric.route`` calls (the crossbar
+primitive, invisible to the scheduler census — its word counters read zero
+by construction) vs as scatter-/gather-indexed sparse-extent streams on the
+burst contract (dispatch scatters token lines into the capacity slots,
+sentinel rows absorb the drops; combine gathers each assignment's slot
+back), asserted bit-identical before timing; the medusa ``_kernel`` variant
+lowers both streams through the fused Pallas bursts.  Cells carry the
+dispatch/combine word census plus ``tokens_dropped`` (the capacity drops).
+
+Speculative-decode cell family (``decode_spec_k{2,4}``): one serving decode
+step with k Medusa draft heads riding along (``decode_fn(draft=True)``,
+step logits ``[B, 1+k, V]``) vs the dense step (``decode_spec_dense``);
+row 0 is asserted bit-identical to the dense logits first — the draft rows
+are pure bookkeeping input, never the commit path.
+
 We lower every form over the same traffic and compare total HLO ops, gather
 census, CPU wall time, and the scheduler word census (moved / padded /
 folded / fused-kernel bursts), for the medusa and crossbar fabrics.
@@ -402,6 +419,91 @@ def sharded_decode_cells(cells: dict, rows: list) -> None:
                          "" if key == "us" else val))
 
 
+def _moe_cfg(impl: str):
+    from repro.configs.base import FabricConfig, ModelConfig, MoEConfig
+
+    return ModelConfig(
+        name=f"bench-moe-{impl}", family="moe", n_layers=1, d_model=D,
+        n_heads=4, n_kv_heads=4, d_ff=0, vocab_size=256,
+        moe=MoEConfig(n_experts=8, top_k=2, expert_d_ff=128,
+                      capacity_factor=1.0),
+        fabric=FabricConfig(n_ports=N, lane_width=8, impl=impl))
+
+
+def moe_dispatch_cells(cells: dict, rows: list) -> None:
+    """The ``moe_dispatch_route`` vs ``moe_dispatch_burst`` A/B (see module
+    docstring).  Bit-parity of the layer output is asserted before timing;
+    the burst census runs eagerly so the word counters and the runtime
+    ``tokens_dropped`` land in the cell.  ``capacity_factor=1.0`` on a
+    random router makes the capacity genuinely bite."""
+    from repro.models import moe as moe_mod
+
+    x = jax.random.normal(jax.random.PRNGKey(5), (8, 64, D), jnp.float32)
+    for impl in ("medusa", "crossbar"):
+        cfg = _moe_cfg(impl)
+        p = moe_mod.moe_params(jax.random.PRNGKey(1), cfg, jnp.float32)
+        kops.use_kernels(False)
+        ref = np.asarray(moe_mod.moe_apply(p, x, cfg, payload="route"))
+        variants = [("moe_dispatch_route", "route", False),
+                    ("moe_dispatch_burst", "burst", False)]
+        if impl == "medusa":       # crossbar bursts never kernelize
+            variants.append(("moe_dispatch_burst_kernel", "burst", True))
+        for name, payload, kern in variants:
+            kops.use_kernels(kern)
+            stats = SchedulerStats()
+            got = moe_mod.moe_apply(p, x, cfg, stats=stats, payload=payload)
+            assert np.array_equal(np.asarray(got), ref), (impl, name)
+            fn = jax.jit(lambda xx, _pl=payload: moe_mod.moe_apply(
+                p, xx, cfg, payload=_pl))
+            cell = {"us": time_us(fn, x, iters=30),
+                    "words_moved": stats.words_moved,
+                    "words_live": stats.words_live,
+                    "kernel_bursts": stats.kernel_bursts,
+                    "tokens_dropped": stats.tokens_dropped}
+            cells[f"{impl}/{name}"] = cell
+            for key, val in cell.items():
+                rows.append((f"fabric_unified/{impl}/{name}/{key}",
+                             val if key == "us" else None,
+                             "" if key == "us" else val))
+    kops.use_kernels(False)
+
+
+def spec_decode_cells(cells: dict, rows: list) -> None:
+    """The ``decode_spec_k{2,4}`` vs ``decode_spec_dense`` A/B: one decode
+    step on the starcoder2 smoke config, with and without the Medusa draft
+    rows appended.  Row 0 of the spec logits is asserted bit-identical to
+    the dense step's before timing (same init key → identical base
+    params; the draft heads fold their own key)."""
+    from repro.configs import get_smoke
+    from repro.models import api as mapi
+
+    base = dataclasses.replace(get_smoke("starcoder2-15b"), dtype="float32")
+    caches = mapi.init_cache(base, 4, 32)
+    tok = jnp.ones((4, 1), jnp.int32)
+    ref = None
+    for k in (0, 2, 4):
+        cfg = dataclasses.replace(base, spec_heads=k,
+                                  name=f"{base.name}-speck{k}")
+        params = mapi.init_params(cfg, jax.random.PRNGKey(0))
+        fn = jax.jit(lambda p_, t_, c_, _cfg=cfg, _d=k > 0:
+                     mapi.decode_fn(p_, t_, c_, 8, _cfg, draft=_d)[0])
+        logits = fn(params, tok, caches)
+        if k == 0:
+            ref = np.asarray(logits)
+            name = "decode_spec_dense"
+        else:
+            assert logits.shape[1] == 1 + k, logits.shape
+            assert np.array_equal(np.asarray(logits[:, :1]), ref), k
+            name = f"decode_spec_k{k}"
+        cell = {"us": time_us(fn, params, tok, caches, iters=30),
+                "draft_rows": k}
+        cells[f"medusa/{name}"] = cell
+        for key, val in cell.items():
+            rows.append((f"fabric_unified/medusa/{name}/{key}",
+                         val if key == "us" else None,
+                         "" if key == "us" else val))
+
+
 def _git_sha() -> str:
     try:
         return subprocess.check_output(
@@ -522,6 +624,8 @@ def run(packs=("packed", "pad"), folds=(1, 2)) -> list:
                                  "" if key == "us" else val))
         paged_decode_cells(cells, rows)
         sharded_decode_cells(cells, rows)
+        moe_dispatch_cells(cells, rows)
+        spec_decode_cells(cells, rows)
     finally:
         kops.use_kernels(kernels_before)
 
@@ -564,6 +668,17 @@ def run(packs=("packed", "pad"), folds=(1, 2)) -> list:
               f"{s8['words_local']} stayed local); wall {s1['us']:.0f}us "
               f"(1dev) -> {s8['us']:.0f}us "
               f"({s8['pool_shards']}dev, host devices)")
+    mr = cells.get("medusa/moe_dispatch_route")
+    mb = cells.get("medusa/moe_dispatch_burst")
+    if mr and mb:
+        print(f"# medusa moe dispatch: burst {mb['us']:.0f}us / "
+              f"{mb['words_moved']} words vs route {mr['us']:.0f}us; "
+              f"{mb['tokens_dropped']} assignments dropped at capacity")
+    k0 = cells.get("medusa/decode_spec_dense")
+    k2 = cells.get("medusa/decode_spec_k2")
+    if k0 and k2:
+        print(f"# spec decode step: k=2 draft rows {k2['us']:.0f}us vs "
+              f"dense {k0['us']:.0f}us")
     return rows
 
 

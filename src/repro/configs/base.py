@@ -266,6 +266,10 @@ class ModelConfig:
     fabric: Optional[FabricConfig] = None
     # --- serving ------------------------------------------------------------------
     serve_fsdp: bool = False      # shard weights over data axis at inference
+    # Medusa-style speculative decoding: k draft heads (residual projections
+    # off the final-norm hidden state, sharing the unembedding) proposing
+    # tokens t+1..t+k per step.  0 → no draft params, dense decode only.
+    spec_heads: int = 0
     # --- parallelism ---------------------------------------------------------------
     sharding_profile: str = "tp_heads"   # tp_heads | sp_seq | moe_cap
     # --- long-context capability -------------------------------------------------

@@ -13,10 +13,16 @@ transfer networks plus the layout/routing primitives consumers actually use:
 * :meth:`kv_port_major` — the production KV-cache application: line-major
   ``[B, T, H, D]`` → port-major ``[B, H, T, D]`` (Pallas kernel on the
   medusa fabric when enabled);
-* :meth:`route` — explicit index routing for data-dependent traffic (MoE
-  top-k dispatch/combine).  Data-dependent destinations cannot use the
-  static diagonal schedule, so every impl routes through the same gather —
-  the fabric still owns the call so the op census has one choke point.
+* :meth:`route` — explicit index routing for data-dependent traffic.
+  Data-dependent destinations cannot use the static diagonal schedule, so
+  every impl routes through the same gather — the fabric still owns the
+  call so the op census has one choke point.  Since the sparse-extent
+  burst contract (``read_burst(indices=)`` / ``write_burst(indices=,
+  into=)``) landed, production consumers express data-dependent movement
+  as indexed streams on the scheduler instead — MoE top-k
+  dispatch/combine (:func:`repro.models.moe.moe_apply`) rides it, and
+  ``route`` remains as the uncounted A/B reference those streams are
+  asserted bit-identical against.
 
 All impls are value-identical; they differ only in the HLO they lower to,
 which is what the paper's FPGA resource comparison becomes on TPU.
@@ -271,6 +277,9 @@ class Fabric:
     def route(self, data: jax.Array, index: jax.Array,
               axis: int = 0) -> jax.Array:
         """Gather ``data`` rows through an explicit ``index`` tensor — the
-        crossbar primitive, used where destinations are data-dependent (MoE
-        top-k staging/combine).  Identical across impls by construction."""
+        crossbar primitive for data-dependent destinations.  Identical
+        across impls by construction.  MoE top-k staging/combine now rides
+        the scheduler's indexed burst streams instead (counted, shared
+        lowering); this stays as the bit-parity reference and the fallback
+        for fabrics that don't bank (``impl="fused"``)."""
         return jnp.take(data, index, axis=axis)

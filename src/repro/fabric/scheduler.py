@@ -159,6 +159,15 @@ class SchedulerStats:
     (injected corruption); ``faults_recovered`` counts engine steps that
     rolled back to the last consistent state and replayed after an
     injected mid-step failure.
+
+    ``tokens_dropped`` counts token→expert assignments the MoE capacity
+    dispatch dropped (rank past the static per-expert capacity — their
+    scatter indices became sentinels and the residual passed through).
+    Unlike the trace-time word counters it is runtime-exact: drop counts
+    are data-dependent, so a traced ``moe_apply`` accumulates them through
+    a debug callback that fires once per executed dispatch (per layer, per
+    step), never once per trace.  Before this counter a dropped token was
+    indistinguishable from a routed one in every census.
     """
     streams_served: int = 0
     flushes: int = 0
@@ -178,6 +187,7 @@ class SchedulerStats:
     swap_in_words: int = 0
     bursts_retried: int = 0
     faults_recovered: int = 0
+    tokens_dropped: int = 0
 
     @property
     def calls_saved(self) -> int:

@@ -111,6 +111,13 @@ def main():
     ap.add_argument("--check-pool", action="store_true",
                     help="run the pool's free-list conservation invariant "
                          "after every engine step (debug)")
+    ap.add_argument("--spec-decode-k", type=int, default=0,
+                    help="Medusa-heads speculative decoding: k draft heads "
+                         "propose a candidate branch per slot each step and "
+                         "the engine's verify_step accepts its longest "
+                         "matching prefix against the committed argmax "
+                         "(token stream identical to k=0; the census "
+                         "reports the acceptance rate)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -143,6 +150,9 @@ def main():
         cfg = dataclasses.replace(
             cfg, fabric=dataclasses.replace(cfg.resolved_fabric,
                                             fused_gather=args.fused_gather))
+    if args.spec_decode_k:
+        # draft heads are model params: init_params grows the "draft" entry
+        cfg = dataclasses.replace(cfg, spec_heads=args.spec_decode_k)
     fab = cfg.resolved_fabric
 
     data = SyntheticLM(cfg, batch=args.batch,
@@ -165,7 +175,8 @@ def main():
                             collective=args.collective,
                             preempt=args.preempt,
                             swap_space_pages=args.swap_space_pages,
-                            check_pool=args.check_pool)
+                            check_pool=args.check_pool,
+                            spec_decode_k=args.spec_decode_k)
         prompts = np.asarray(batch["tokens"])
         reqs = [Request(i, prompts[i], max_new_tokens=args.gen_len,
                         priority=i % max(args.priority_classes, 1))
@@ -227,6 +238,18 @@ def main():
                       "banks the whole pool each step")
         else:
             print("fabric: decode step unscheduled (geometry fallback)")
+        if cfg.moe is not None:
+            print(f"moe dispatch: {fs.tokens_dropped} token assignments "
+                  f"dropped at capacity over the whole run (sentinel rows "
+                  f"in the dispatch scatter; residual passed through)")
+        if eng.spec_k:
+            print(f"speculative decode[k={eng.spec_k}]: "
+                  f"{eng.spec_accepted}/{eng.spec_proposed} draft tokens "
+                  f"accepted ({eng.spec_acceptance:.1%}), "
+                  f"{eng.spec_rejected} rejected; per-step gathered-branch "
+                  f"words {fs.words_live} (the k candidate branches share "
+                  f"the committed prefix, so the fused page-table gather "
+                  f"serves all of them)")
         print("sample:", reqs[0].generated[:16])
     else:
         extra = {k: batch[k] for k in ("patch_embeds", "frames") if k in batch}

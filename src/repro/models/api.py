@@ -85,7 +85,7 @@ def init_cache(cfg: ModelConfig, batch: int, t_max: int,
 
 def decode_fn(params, token, caches, pos, cfg: ModelConfig, sched=None,
               page_table=None, page_size: int = 0, t_depth: int = 0,
-              live_plan=None, shard_plans=None):
+              live_plan=None, shard_plans=None, draft: bool = False):
     """One decode step.  ``sched`` (a :class:`repro.fabric.BurstScheduler`)
     routes the step's KV banking — and ``serve_fsdp`` weight streaming —
     through one read and one write network burst (decoder-only families).
@@ -97,14 +97,17 @@ def decode_fn(params, token, caches, pos, cfg: ModelConfig, sched=None,
     frames (``FabricConfig.fused_gather``); ``shard_plans`` (``{reps:
     (fetch, place)}`` from :func:`repro.fabric.shard_plan`) lowers those
     sparse bursts over the pool-sharded device mesh
-    (``FabricConfig.pool_shards``)."""
+    (``FabricConfig.pool_shards``).  ``draft`` appends the Medusa draft
+    heads' proposals to the step logits (``[B, 1+k, V]``, row 0 the real
+    unembedding — see :func:`repro.models.lm._emit_logits`)."""
     if cfg.family == "audio":
         assert page_table is None, "paged pool covers decoder-only families"
+        assert not draft, "draft heads cover decoder-only families"
         return whisper.decode_step(params, token, caches, pos, cfg)
     return lm.decode_step(params, token, caches, pos, cfg, sched=sched,
                           page_table=page_table, page_size=page_size,
                           t_depth=t_depth, live_plan=live_plan,
-                          shard_plans=shard_plans)
+                          shard_plans=shard_plans, draft=draft)
 
 
 def greedy_generate(params, prompt, cfg: ModelConfig, steps: int,

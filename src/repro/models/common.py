@@ -621,6 +621,26 @@ def logits_apply(p, x: jax.Array, cfg) -> jax.Array:
     return shard(logits, "batch", "seq", "vocab")
 
 
+def draft_head_params(key, cfg, dtype) -> dict:
+    """Medusa-style draft heads: ``cfg.spec_heads`` residual projections
+    (``d_model → d_model``, SiLU) off the final-norm hidden state; logits
+    come from the shared (tied) unembedding, so a head adds ``d²`` params,
+    not ``d·V``."""
+    return {"w": jnp.stack([
+        dense_init(k, cfg.d_model, cfg.d_model, dtype)
+        for k in jax.random.split(key, cfg.spec_heads)])}
+
+
+def draft_logits(p_draft, x: jax.Array, p_embed, cfg) -> jax.Array:
+    """``x [B, S, d]`` (final-norm hidden state) → ``[B, k, V]`` draft-head
+    logits off the last position — head i proposes the token i+1 steps
+    ahead of the one the real unembedding scores."""
+    last = x[:, -1]                                         # [B, d]
+    h = last[:, None, :] + jax.nn.silu(
+        jnp.einsum("bd,kde->bke", last, p_draft["w"]))      # [B, k, d]
+    return logits_apply(p_embed, h, cfg)
+
+
 def softmax_xent(logits: jax.Array, targets: jax.Array,
                  vocab_size: int) -> jax.Array:
     """Mean cross-entropy; padded vocab entries masked out of the softmax."""

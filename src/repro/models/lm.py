@@ -73,6 +73,9 @@ def init_params(cfg: ModelConfig, key) -> dict:
     params["tail"] = [_block_params(jax.random.fold_in(k_tail, i), t, cfg, dtype)
                       for i, t in enumerate(tail)]
     params["final_norm"] = cm.init_norm(k_fin, cfg.d_model, dtype, cfg.norm)
+    if cfg.spec_heads:
+        params["draft"] = cm.draft_head_params(
+            jax.random.fold_in(key, 0xD4AF7), cfg, dtype)
     return params
 
 
@@ -317,12 +320,29 @@ def forward(params, tokens, cfg: ModelConfig, *, patch_embeds=None,
     return cm.logits_apply(params["embed"], x, cfg)
 
 
+def _emit_logits(params, x, cfg: ModelConfig, draft: bool) -> jax.Array:
+    """Step logits off the final-norm hidden state.  With ``draft`` (and
+    draft-head params present) the k Medusa draft heads append their
+    proposals along the position axis: ``[B, 1+k, V]`` with row 0 the real
+    unembedding — callers that index ``[:, 0]`` (or don't pass ``draft``)
+    see exactly the dense logits."""
+    logits = cm.logits_apply(params["embed"], x, cfg)
+    if draft and "draft" in params:
+        logits = jnp.concatenate(
+            [logits,
+             cm.draft_logits(params["draft"], x, params["embed"], cfg)],
+            axis=1)
+    return logits
+
+
 def decode_step(params, token, caches, pos, cfg: ModelConfig, sched=None,
                 page_table=None, page_size: int = 0, t_depth: int = 0,
-                live_plan=None, shard_plans=None):
+                live_plan=None, shard_plans=None, draft: bool = False):
     """One serving decode step: ``token [B, 1]`` + caches at ``pos`` →
     (logits [B, 1, V], new caches).  KV caches are read through the Medusa
-    port-major layout engine (cfg.kv_layout).
+    port-major layout engine (cfg.kv_layout).  With ``draft`` the Medusa
+    draft heads ride along: logits become ``[B, 1+k, V]``
+    (see :func:`_emit_logits`); cache movement is unchanged.
 
     With a :class:`repro.fabric.BurstScheduler` (``sched``), every
     full-attention leaf's port-major conversion is hoisted out of the layer
@@ -372,15 +392,15 @@ def decode_step(params, token, caches, pos, cfg: ModelConfig, sched=None,
                                       cfg, sched, plan, phys=phys, live=live,
                                       shard_plans=(shard_plans
                                                    if live is not None
-                                                   else None))
+                                                   else None), draft=draft)
     if phys is not None:
         return _decode_step_paged_fallback(params, token, caches, pos,
-                                           positions, cfg, phys)
+                                           positions, cfg, phys, draft=draft)
     x = cm.embed_apply(params["embed"], token)
     x, new_caches = _scan_blocks(params, x, cfg, positions=positions,
                                  caches=caches, pos=pos, remat=False)
     x = cm.apply_norm(x, params["final_norm"], cfg.norm)
-    return cm.logits_apply(params["embed"], x, cfg), new_caches
+    return _emit_logits(params, x, cfg, draft), new_caches
 
 
 def _full_attn(t: str, cfg: ModelConfig) -> bool:
@@ -427,7 +447,7 @@ def _flat_frames(pool: jax.Array) -> jax.Array:
 
 def _decode_step_scheduled(params, token, caches, pos, positions,
                            cfg: ModelConfig, sched, plan, phys=None,
-                           live=None, shard_plans=None):
+                           live=None, shard_plans=None, draft=False):
     """The burst-scheduled decode step (see :func:`decode_step`).
 
     Burst 1 (read network): every planned KV leaf — and, under
@@ -593,11 +613,11 @@ def _decode_step_scheduled(params, token, caches, pos, positions,
             for leaf_name in ("k", "v")}
 
     x = cm.apply_norm(x, params["final_norm"], cfg.norm)
-    return cm.logits_apply(params["embed"], x, cfg), new_caches
+    return _emit_logits(params, x, cfg, draft), new_caches
 
 
 def _decode_step_paged_fallback(params, token, caches, pos, positions,
-                                cfg: ModelConfig, phys):
+                                cfg: ModelConfig, phys, draft=False):
     """Per-layer paged decode (unscheduled, off-geometry, or the ``fused``
     fabric): gather each pool into its dense line-major view, run the
     per-layer path unchanged, scatter the updated frames back.  Bit-parity
@@ -624,7 +644,7 @@ def _decode_step_paged_fallback(params, token, caches, pos, positions,
             entry[leaf_name] = flat.reshape(pool.shape)
         new_caches[kind][i] = entry
     x = cm.apply_norm(x, params["final_norm"], cfg.norm)
-    return cm.logits_apply(params["embed"], x, cfg), new_caches
+    return _emit_logits(params, x, cfg, draft), new_caches
 
 
 def _enqueue_weight_stream(sched, params, n: int):

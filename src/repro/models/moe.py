@@ -9,16 +9,50 @@ schedule (N-1 ``ppermute`` rotations — ``repro/parallel/collectives.py``).
 Dispatch is sort-based (no [T, E, C] one-hot): tokens are ranked within their
 expert by a stable sort over assignments; tokens past capacity are dropped
 (their residual passes through — standard capacity-factor semantics).
+
+Payload movement rides the fabric's burst contract: token→expert is the same
+logical→physical indirection as a page table, so dispatch is a
+scatter-indexed write into the ``[E, C]`` expert slots (capacity drops become
+sentinel rows, exactly like page-scatter sentinels) and combine is a
+gather-indexed read per assignment — both :class:`BurstScheduler`
+sparse-extent streams sharing the packed/fold/kernel lowering and counted in
+:class:`SchedulerStats`.  ``payload="route"`` keeps the bare ``fabric.route``
+gathers as the bit-parity reference (``tests/test_moe_fabric.py``).
 """
 
 from __future__ import annotations
+
+import contextlib
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.fabric.fabric import Fabric
+from repro.fabric.scheduler import (BurstScheduler, FRAME_SENTINEL,
+                                    SchedulerStats)
 from repro.models.common import dense_init
 from repro.parallel.sharding import shard
+
+#: module-level stats sink: the serving engine traces ``moe_apply`` deep
+#: inside its jitted step, so it routes accounting here (see
+#: :func:`dispatch_stats`) instead of threading a kwarg through every layer.
+_DISPATCH_STATS: Optional[SchedulerStats] = None
+
+
+@contextlib.contextmanager
+def dispatch_stats(stats: Optional[SchedulerStats]):
+    """Route the traffic accounting of every ``moe_apply`` traced inside the
+    block to ``stats``.  Must be active at *trace* time: word counters
+    accumulate once per trace (the scheduler convention), while the
+    data-dependent ``tokens_dropped`` counter is captured into a debug
+    callback that fires per execution."""
+    global _DISPATCH_STATS
+    prev, _DISPATCH_STATS = _DISPATCH_STATS, stats
+    try:
+        yield
+    finally:
+        _DISPATCH_STATS = prev
 
 
 def moe_params(key, cfg, dtype) -> dict:
@@ -36,13 +70,92 @@ def moe_params(key, cfg, dtype) -> dict:
     }
 
 
-def moe_apply(p, x: jax.Array, cfg) -> jax.Array:
+def _count_dropped(stats: Optional[SchedulerStats], keep: jax.Array) -> None:
+    """Accumulate the capacity-drop count into ``stats.tokens_dropped``.
+    Concrete (eager) counts add directly; traced counts register a debug
+    callback so the counter stays runtime-exact under jit/scan."""
+    if stats is None:
+        return
+    drops = keep.size - jnp.sum(keep, dtype=jnp.int32)
+    if isinstance(drops, jax.core.Tracer):
+        def _add(d, _s=stats):
+            _s.tokens_dropped += int(d)
+        jax.debug.callback(_add, drops)
+    else:
+        stats.tokens_dropped += int(drops)
+
+
+def _burst_dispatch(fabric: Fabric, xt: jax.Array, tok: jax.Array,
+                    keep: jax.Array, slot: jax.Array, ec: int,
+                    stats: Optional[SchedulerStats]) -> jax.Array:
+    """Dispatch as one sparse-extent write burst: the per-assignment token
+    buffer ``xt[tok] [T*k, d]`` is viewed as frames ``[T*k, N, d/N]`` and
+    scatter-indexed into the zeroed ``[E*C, d]`` slot pool (dropped
+    assignments carry sentinel rows, which the write network drops like any
+    page-scatter sentinel; slots no assignment reaches keep their zeros).
+    Bit-identical to the masked ``fabric.route`` gather by construction —
+    both move copies, never arithmetic."""
+    n = fabric.n_ports
+    d = xt.shape[1]
+    xa = xt[tok]                                            # [T*k, d]
+    sidx = jnp.where(keep, slot, FRAME_SENTINEL).astype(jnp.int32)
+    pad = -xa.shape[0] % n
+    if pad:
+        xa = jnp.concatenate([xa, jnp.zeros((pad, d), xa.dtype)])
+        sidx = jnp.concatenate(
+            [sidx, jnp.full((pad,), FRAME_SENTINEL, jnp.int32)])
+    lines = xa.reshape(-1, n, d // n)
+    banked = lines.reshape(-1, n, n, d // n).swapaxes(1, 2)
+    ec_pad = ec + (-ec % n)
+    into = jnp.zeros((ec_pad, n, d // n), xt.dtype)
+    sched = BurstScheduler(fabric, stats=stats)
+    sched.enqueue_write("moe/dispatch", banked, scatter=sidx, into=into)
+    pool = sched.flush()["moe/dispatch"]                    # [EC_pad, N, d/N]
+    return pool.reshape(ec_pad, d)[:ec]
+
+
+def _burst_combine(fabric: Fabric, y: jax.Array, keep: jax.Array,
+                   slot: jax.Array,
+                   stats: Optional[SchedulerStats]) -> jax.Array:
+    """Combine as one sparse-extent read burst: the expert output pool
+    ``[E*C, d]`` is the backing line stream and each assignment gathers its
+    slot's frame (dropped assignments gather the sentinel → zero frames,
+    matching the masked route)."""
+    n = fabric.n_ports
+    ec, d = y.shape
+    k_tot = slot.shape[0]
+    src = y
+    if ec % n:
+        src = jnp.concatenate([src, jnp.zeros((-ec % n, d), y.dtype)])
+    lines = src.reshape(-1, n, d // n)
+    gidx = jnp.where(keep, slot, FRAME_SENTINEL).astype(jnp.int32)
+    pad = -k_tot % n
+    if pad:
+        gidx = jnp.concatenate(
+            [gidx, jnp.full((pad,), FRAME_SENTINEL, jnp.int32)])
+    sched = BurstScheduler(fabric, stats=stats)
+    sched.enqueue_read("moe/combine", lines, gather=gidx)
+    banked = sched.flush()["moe/combine"]                   # [K/N, N, N, d/N]
+    return banked.swapaxes(1, 2).reshape(-1, d)[:k_tot]
+
+
+def moe_apply(p, x: jax.Array, cfg, stats: Optional[SchedulerStats] = None,
+              payload: Optional[str] = None) -> jax.Array:
     """``x [B, S, d]`` → MoE FFN output, top-k routing with capacity.
 
     With ``moe.pad_to`` set, the expert dim is padded with dead experts the
     router can never select (logits only cover the real experts); capacity is
     computed over real experts so semantics are unchanged — only the EP
     sharding divisibility improves.
+
+    ``payload`` selects how dispatch/combine move the activations:
+    ``"burst"`` (the default whenever the fabric banks and ``d_model`` splits
+    across its ports) lowers both as :class:`BurstScheduler` sparse-extent
+    streams; ``"route"`` is the bare ``fabric.route`` gather reference.  The
+    two are bit-identical — ``tests/test_moe_fabric.py`` holds the line
+    across the pack×fold×kernel matrix.  ``stats`` (or an ambient
+    :func:`dispatch_stats` context) receives the burst accounting plus the
+    runtime-exact ``tokens_dropped`` counter.
     """
     m = cfg.moe
     fabric = Fabric.for_model(cfg)
@@ -50,6 +163,11 @@ def moe_apply(p, x: jax.Array, cfg) -> jax.Array:
     b, s, d = x.shape
     t = b * s
     xt = x.reshape(t, d)
+    if stats is None:
+        stats = _DISPATCH_STATS
+    if payload is None:
+        payload = ("burst" if fabric.banks_kv and d % fabric.n_ports == 0
+                   else "route")
 
     logits = (xt.astype(jnp.float32) @ p["router"])               # [T, E_real]
     probs = jax.nn.softmax(logits, axis=-1)
@@ -67,17 +185,24 @@ def moe_apply(p, x: jax.Array, cfg) -> jax.Array:
     cap = int(t * m.top_k * m.capacity_factor / m.n_experts) or 1
     keep = rank < cap
     slot = jnp.where(keep, a * cap + rank, e_pad * cap)           # drop→OOB
+    _count_dropped(stats, keep)
 
-    # Dispatch moves PAYLOAD with gathers only: the scatter touches 4-byte
-    # indices, never the d-wide activations (a payload scatter lowers to
-    # full-width routing — the crossbar again; see EXPERIMENTS.md §Perf).
-    # The gather itself is the fabric's routing primitive.
-    inv = jnp.full((e_pad * cap,), t * m.top_k, jnp.int32)
-    inv = inv.at[slot].set(jnp.arange(t * m.top_k, dtype=jnp.int32),
-                           mode="drop")                           # [E*C]
-    slot_valid = inv < t * m.top_k
-    src_tok = jnp.clip(inv // m.top_k, 0, t - 1)
-    buf = jnp.where(slot_valid[:, None], fabric.route(xt, src_tok), 0)
+    if payload == "burst":
+        # dispatch rides the write network: one scatter-indexed sparse
+        # burst lands each kept assignment's frame in its expert slot
+        # (fused scatter kernel on the medusa fabric, take+network+scatter
+        # unrolled elsewhere — the same lowering the page pool uses).
+        buf = _burst_dispatch(fabric, xt, tok, keep, slot, e_pad * cap,
+                              stats)
+    else:
+        # route reference: payload moves through gathers only — the
+        # scatter touches 4-byte indices, never the d-wide activations.
+        inv = jnp.full((e_pad * cap,), t * m.top_k, jnp.int32)
+        inv = inv.at[slot].set(jnp.arange(t * m.top_k, dtype=jnp.int32),
+                               mode="drop")                       # [E*C]
+        slot_valid = inv < t * m.top_k
+        src_tok = jnp.clip(inv // m.top_k, 0, t - 1)
+        buf = jnp.where(slot_valid[:, None], fabric.route(xt, src_tok), 0)
     buf = buf.reshape(e_pad, cap, d)
     buf = shard(buf, "experts", "expert_cap", "d_model")
 
@@ -90,21 +215,34 @@ def moe_apply(p, x: jax.Array, cfg) -> jax.Array:
 
     # combine: gather per assignment, weight, and reduce over the (static,
     # consecutive) top-k axis by reshape+sum — no scatter-add.
-    gathered = jnp.where(keep[:, None],
-                         fabric.route(y, jnp.clip(slot, 0, e_pad * cap - 1)),
-                         0)
+    if payload == "burst":
+        gathered = _burst_combine(fabric, y, keep, slot, stats)
+    else:
+        gathered = jnp.where(keep[:, None],
+                             fabric.route(y, jnp.clip(slot, 0,
+                                                      e_pad * cap - 1)),
+                             0)
     w = top_p.reshape(-1)[:, None].astype(x.dtype)
     out = (gathered * w).reshape(t, m.top_k, d).sum(axis=1)
     return out.reshape(b, s, d)
 
 
 def aux_load_balance_loss(p, x: jax.Array, cfg) -> jax.Array:
-    """Switch-style load-balance auxiliary loss (fraction x probability)."""
+    """Switch-style load-balance auxiliary loss (fraction x probability).
+
+    ``frac`` counts **every top-k assignment** — the router actually in use
+    dispatches top-k, so the load fraction is the share of all ``T*k``
+    assignments each expert receives (it sums to 1, and the loss floors at 1
+    under a perfectly balanced router, exactly as in the top-1 Switch form).
+    The old ``argmax`` form only counted first choices, so an expert fed
+    exclusively by second choices looked idle to the loss while running at
+    full capacity.
+    """
     m = cfg.moe
     t = x.shape[0] * x.shape[1]
     logits = x.reshape(t, -1).astype(jnp.float32) @ p["router"]
     probs = jax.nn.softmax(logits, axis=-1)
-    top_e = jnp.argmax(probs, axis=-1)
-    frac = jnp.mean(jax.nn.one_hot(top_e, m.n_experts), axis=0)
+    top_e = jax.lax.top_k(probs, m.top_k)[1]                      # [T, k]
+    frac = jnp.mean(jax.nn.one_hot(top_e, m.n_experts), axis=(0, 1))
     imp = jnp.mean(probs, axis=0)
     return m.n_experts * jnp.sum(frac * imp)

@@ -79,6 +79,7 @@ from repro.fabric import (BurstScheduler, Fabric, PagedKVCache,
 from repro.models import api
 from repro.models import common as cm
 from repro.models import lm
+from repro.models import moe as moe_mod
 
 
 def _lead_prod(flat) -> int:
@@ -121,9 +122,37 @@ class ServingEngine:
                  collective: Optional[str] = None,
                  preempt: Optional[str] = None,
                  swap_space_pages: Optional[int] = None,
-                 check_pool: bool = False, fault_injector=None):
+                 check_pool: bool = False, fault_injector=None,
+                 spec_decode_k: int = 0, draft_fn=None):
         assert cfg.family != "audio", "engine covers decoder-only families"
         self.cfg = cfg
+        # Medusa-heads speculative decoding (spec_decode_k > 0): every step
+        # the model's k draft heads propose a candidate branch per slot and
+        # verify_step() accepts its longest prefix against the target's
+        # committed argmax — the committed token stream is the dense
+        # engine's, bit for bit, because commits only ever come from the
+        # real unembedding (row 0 of the step logits).  ``draft_fn(req,
+        # committed) -> [k tokens]`` overrides the model heads (tests use an
+        # oracle/adversarial proposer); with draft heads, params grow a
+        # "draft" entry (auto-initialized when absent).
+        self.spec_k = int(spec_decode_k)
+        self.draft_fn = draft_fn
+        self._model_draft = self.spec_k > 0 and draft_fn is None
+        if self._model_draft and "draft" not in params:
+            params = dict(params)
+            params["draft"] = cm.draft_head_params(
+                jax.random.PRNGKey(0x5BEC),
+                dataclasses.replace(cfg, spec_heads=self.spec_k),
+                cfg.param_dtype)
+        if self._model_draft and params["draft"]["w"].shape[0] < self.spec_k:
+            raise ValueError(
+                f"spec_decode_k={self.spec_k} wants at least that many "
+                f"draft heads; params carry "
+                f"{params['draft']['w'].shape[0]}")
+        self.spec_proposed = 0
+        self.spec_accepted = 0
+        self.spec_rejected = 0
+        self._draft_queue: Dict[int, List[int]] = {}
         self.params = params
         self.max_slots = max_slots
         self.t_max = t_max
@@ -237,33 +266,45 @@ class ServingEngine:
         # (plus one eager prefill burst per admission wave).
         self.fabric_stats = SchedulerStats()
 
+        # MoE dispatch accounting (burst streams + the runtime-exact
+        # tokens_dropped counter) routes to the same per-step stats: the
+        # sink must be ambient at trace time (repro.models.moe.dispatch_stats)
+        draft = self._model_draft
         if self.paged and self.fused and shards > 1:
             def _step(p, tok, caches, pos, page_table, live_idx, expand,
                       dense_pos, shard_plans):
                 sched = BurstScheduler(self.fabric, stats=self.fabric_stats)
-                return api.decode_fn(p, tok, caches, pos, cfg, sched=sched,
-                                     page_table=page_table, page_size=ps,
-                                     t_depth=self.t_alloc,
-                                     live_plan=(live_idx, expand, dense_pos),
-                                     shard_plans=shard_plans)
+                with moe_mod.dispatch_stats(self.fabric_stats):
+                    return api.decode_fn(
+                        p, tok, caches, pos, cfg, sched=sched,
+                        page_table=page_table, page_size=ps,
+                        t_depth=self.t_alloc,
+                        live_plan=(live_idx, expand, dense_pos),
+                        shard_plans=shard_plans, draft=draft)
         elif self.paged and self.fused:
             def _step(p, tok, caches, pos, page_table, live_idx, expand,
                       dense_pos):
                 sched = BurstScheduler(self.fabric, stats=self.fabric_stats)
-                return api.decode_fn(p, tok, caches, pos, cfg, sched=sched,
-                                     page_table=page_table, page_size=ps,
-                                     t_depth=self.t_alloc,
-                                     live_plan=(live_idx, expand, dense_pos))
+                with moe_mod.dispatch_stats(self.fabric_stats):
+                    return api.decode_fn(
+                        p, tok, caches, pos, cfg, sched=sched,
+                        page_table=page_table, page_size=ps,
+                        t_depth=self.t_alloc,
+                        live_plan=(live_idx, expand, dense_pos), draft=draft)
         elif self.paged:
             def _step(p, tok, caches, pos, page_table):
                 sched = BurstScheduler(self.fabric, stats=self.fabric_stats)
-                return api.decode_fn(p, tok, caches, pos, cfg, sched=sched,
-                                     page_table=page_table, page_size=ps,
-                                     t_depth=self.t_alloc)
+                with moe_mod.dispatch_stats(self.fabric_stats):
+                    return api.decode_fn(p, tok, caches, pos, cfg,
+                                         sched=sched, page_table=page_table,
+                                         page_size=ps, t_depth=self.t_alloc,
+                                         draft=draft)
         else:
             def _step(p, tok, caches, pos):
                 sched = BurstScheduler(self.fabric, stats=self.fabric_stats)
-                return api.decode_fn(p, tok, caches, pos, cfg, sched=sched)
+                with moe_mod.dispatch_stats(self.fabric_stats):
+                    return api.decode_fn(p, tok, caches, pos, cfg,
+                                         sched=sched, draft=draft)
 
         self._decode = jax.jit(_step)
 
@@ -393,6 +434,9 @@ class ServingEngine:
             req.generated.append(first)
             self.tokens[slot, 0] = first
         self._admitted_at[slot] = self._step_count
+        # draft branches are a per-tenure cache: a slot changing hands (or
+        # a request resuming after eviction) starts with a drained branch
+        self._draft_queue.pop(slot, None)
 
     # -- preemption ----------------------------------------------------------
     def _make_room(self, req: Request, need: int, protected: set,
@@ -519,13 +563,22 @@ class ServingEngine:
             logits, new_caches = self._decode(*args)
         self.kv.update(new_caches)
         self.last_logits = logits[:, 0]
+        # commits only ever read row 0 — the real unembedding — so the
+        # token stream is the dense engine's regardless of spec_decode_k
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        drafts = None
+        if self._model_draft:
+            drafts = np.asarray(
+                jnp.argmax(logits[:, 1:1 + self.spec_k], axis=-1), np.int32)
         for s in live:
             req = self.active[s]
             self.pos[s] += 1
             self.kv.extend(s, int(self.pos[s]))
             req.generated.append(int(nxt[s]))
             self.tokens[s, 0] = int(nxt[s])
+            if self.spec_k:
+                self.verify_step(s, req, int(nxt[s]),
+                                 None if drafts is None else drafts[s])
             if (len(req.generated) >= req.max_new_tokens
                     or self.pos[s] + 1 >= self.t_max):
                 req.done = True
@@ -538,8 +591,47 @@ class ServingEngine:
                 self.kv.free(s)
                 self._page_reserve.pop(s, None)
                 self._admitted_at.pop(s, None)
+                self._draft_queue.pop(s, None)
         return len([s for s in range(self.max_slots)
                     if self.active[s] is not None])
+
+    # -- speculative decoding -------------------------------------------------
+    def verify_step(self, slot: int, req: Request, committed: int,
+                    drafts) -> None:
+        """Verify one level of the slot's draft branch against the target's
+        committed token (longest-matching-prefix acceptance, unrolled one
+        token per engine step).  The slot's candidate branch prefix rides
+        the step's existing fused page-table gather — all k candidates
+        share the committed prefix, so the ``gather=`` streams that banked
+        the slot's live frames for the target ARE the branch gather; no new
+        kernel, and the census's per-step ``words_live`` is the gathered
+        branch traffic.  A match pops the branch head
+        (``spec_accepted``); a mismatch discards the remaining branch
+        (``spec_rejected`` — the committed argmax is itself the correction
+        token, so nothing needs re-decoding); a drained branch takes on k
+        fresh proposals from the draft heads (or ``draft_fn``)."""
+        q = self._draft_queue.get(slot)
+        if q:
+            if q[0] == committed:
+                self.spec_accepted += 1
+                q.pop(0)
+            else:
+                self.spec_rejected += len(q)
+                q.clear()
+        if not self._draft_queue.get(slot):
+            if self.draft_fn is not None:
+                prop = self.draft_fn(req, committed)
+            else:
+                prop = [] if drafts is None else [int(x) for x in drafts]
+            prop = list(prop)[:self.spec_k]
+            if prop:
+                self._draft_queue[slot] = prop
+                self.spec_proposed += len(prop)
+
+    @property
+    def spec_acceptance(self) -> float:
+        """Fraction of proposed draft tokens the target verified."""
+        return self.spec_accepted / max(1, self.spec_proposed)
 
     def run_to_completion(self, max_steps: int = 10_000) -> None:
         """Step until every submitted request retires.  Raises — rather
@@ -587,6 +679,8 @@ class ServingEngine:
                 pool.pages_allocated, pool.pages_reclaimed,
                 pool.pages_swapped_out, pool.pages_swapped_in),
             stats=dataclasses.replace(self.fabric_stats),
+            spec=(self.spec_proposed, self.spec_accepted, self.spec_rejected,
+                  {s: list(q) for s, q in self._draft_queue.items()}),
             reqs=reqs)
 
     def _restore(self, snap: dict) -> None:
@@ -621,6 +715,9 @@ class ServingEngine:
             pool.pages_swapped_in = s_in
         for f in dataclasses.fields(SchedulerStats):
             setattr(self.fabric_stats, f.name, getattr(snap["stats"], f.name))
+        (self.spec_proposed, self.spec_accepted, self.spec_rejected,
+         queues) = snap["spec"]
+        self._draft_queue = {s: list(q) for s, q in queues.items()}
         for r, n_gen, done in snap["reqs"]:
             del r.generated[n_gen:]
             r.done = done

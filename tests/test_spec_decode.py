@@ -1,0 +1,223 @@
+"""Medusa-heads speculative decoding on the serving engine.
+
+The contract: commits only ever come from the real unembedding (row 0 of
+the step logits), so the committed token stream is the dense engine's bit
+for bit at any ``spec_decode_k``; the draft heads/``draft_fn`` only feed
+``verify_step``'s longest-matching-prefix bookkeeping.  Levels:
+
+* model level — ``decode_fn(draft=True)`` appends the k draft-head rows
+  without perturbing row 0;
+* engine level — token parity vs the vanilla engine under churny admission
+  with model heads, a greedy oracle draft (== target: rejects nothing) and
+  an adversarial draft (accepts exactly the matching prefix);
+* admission level — the ``submit()`` never-servable reach check reads the
+  *rounded* pool (page count bumped for N-divisibility and ``--pool-shards``),
+  at the boundary, single-device and sharded.
+"""
+
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import api
+from repro.serving.engine import Request, ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _cfg():
+    return dataclasses.replace(get_smoke("starcoder2-15b"), dtype="float32")
+
+
+_PARAMS = {}
+
+
+def _params(cfg):
+    if cfg.name not in _PARAMS:
+        _PARAMS[cfg.name] = api.init_params(cfg, KEY)
+    return _PARAMS[cfg.name]
+
+
+#: churny admission: (arrival step, rid, prompt len, max_new) with more
+#: requests than slots, so slots turn over mid-run
+ARRIVALS = [(0, 0, 5, 4), (0, 1, 7, 3), (2, 2, 3, 5), (4, 3, 6, 4)]
+
+
+def _drive(eng, arrivals=ARRIVALS):
+    """Submit requests at their arrival steps and run to completion."""
+    pending = sorted(arrivals)
+    reqs, t, i = {}, 0, 0
+    for _ in range(300):
+        while i < len(pending) and pending[i][0] <= t:
+            _, rid, plen, gen = pending[i]
+            r = Request(rid, list(range(1, plen + 1)), max_new_tokens=gen)
+            eng.submit(r)
+            reqs[rid] = r
+            i += 1
+        live = eng.step()
+        t += 1
+        if (i == len(pending) and live == 0 and not eng.queue
+                and not eng._swapped):
+            return reqs
+    raise AssertionError("churny workload did not complete")
+
+
+def _reference_streams(cfg, params):
+    eng = ServingEngine(cfg, params, max_slots=2, t_max=16)
+    return {rid: list(r.generated) for rid, r in _drive(eng).items()}
+
+
+# ---------------------------------------------------------------------------
+# model level: draft rows ride along, row 0 untouched
+# ---------------------------------------------------------------------------
+
+def test_decode_draft_rows_do_not_perturb_row0():
+    cfg = dataclasses.replace(_cfg(), spec_heads=2,
+                              name="starcoder2-smoke-draft")
+    params = api.init_params(cfg, KEY)
+    assert params["draft"]["w"].shape[0] == 2
+    caches = api.init_cache(cfg, 2, 8)
+    tok = jnp.ones((2, 1), jnp.int32)
+    dense, _ = api.decode_fn(params, tok, caches, 0, cfg)
+    both, _ = api.decode_fn(params, tok, caches, 0, cfg, draft=True)
+    assert both.shape == (2, 3, dense.shape[-1])
+    np.testing.assert_array_equal(np.asarray(both[:, :1]), np.asarray(dense))
+
+
+# ---------------------------------------------------------------------------
+# engine level: parity + acceptance semantics under churny admission
+# ---------------------------------------------------------------------------
+
+def test_spec_model_heads_token_parity_churny():
+    """Model draft heads (random init → low acceptance): the committed
+    streams still equal the vanilla engine's exactly."""
+    cfg = _cfg()
+    params = _params(cfg)
+    ref = _reference_streams(cfg, params)
+    eng = ServingEngine(cfg, params, max_slots=2, t_max=16, spec_decode_k=2)
+    got = {rid: list(r.generated) for rid, r in _drive(eng).items()}
+    assert got == ref
+    assert eng.spec_proposed > 0
+    assert eng.spec_accepted + eng.spec_rejected <= eng.spec_proposed
+
+
+def test_spec_oracle_draft_accepts_everything():
+    """A greedy draft that equals the target (it reads the reference
+    continuation) never has a proposal rejected."""
+    cfg = _cfg()
+    params = _params(cfg)
+    ref = _reference_streams(cfg, params)
+
+    def oracle(req, committed):
+        done = len(req.generated)          # committed token included
+        return ref[req.rid][done:done + 2]
+
+    eng = ServingEngine(cfg, params, max_slots=2, t_max=16,
+                        spec_decode_k=2, draft_fn=oracle)
+    got = {rid: list(r.generated) for rid, r in _drive(eng).items()}
+    assert got == ref
+    assert eng.spec_accepted > 0
+    assert eng.spec_rejected == 0
+    assert eng.spec_acceptance > 0
+
+
+def test_spec_adversarial_draft_accepts_matching_prefix_only():
+    """Drafts of [correct, wrong]: the matching prefix (1 token) is
+    accepted, the wrong tail rejected — and an always-wrong draft accepts
+    nothing.  Token streams never deviate either way."""
+    cfg = _cfg()
+    params = _params(cfg)
+    ref = _reference_streams(cfg, params)
+    vocab = cfg.vocab_size
+
+    def half_right(req, committed):
+        done = len(req.generated)
+        nxt = ref[req.rid][done:done + 1]
+        return nxt + [(t + 1) % vocab for t in nxt]     # correct, then wrong
+
+    eng = ServingEngine(cfg, params, max_slots=2, t_max=16,
+                        spec_decode_k=2, draft_fn=half_right)
+    got = {rid: list(r.generated) for rid, r in _drive(eng).items()}
+    assert got == ref
+    assert eng.spec_accepted > 0 and eng.spec_rejected > 0
+    assert 0 < eng.spec_acceptance < 1
+
+    def always_wrong(req, committed):
+        done = len(req.generated)
+        return [(t + 1) % vocab for t in ref[req.rid][done:done + 2]]
+
+    eng2 = ServingEngine(cfg, params, max_slots=2, t_max=16,
+                         spec_decode_k=2, draft_fn=always_wrong)
+    got2 = {rid: list(r.generated) for rid, r in _drive(eng2).items()}
+    assert got2 == ref
+    assert eng2.spec_accepted == 0
+    assert eng2.spec_rejected > 0
+
+
+# ---------------------------------------------------------------------------
+# admission level: submit() reads the rounded pool
+# ---------------------------------------------------------------------------
+
+def test_submit_reach_check_sees_rounded_pool():
+    """``pool_pages=3`` with page_size 3 on an N=2 fabric rounds to 4
+    pages ((3*3) % 2 != 0): a request whose reach needs exactly the rounded
+    4 pages must be admitted and served; 5 pages stays never-servable."""
+    cfg = _cfg()
+    params = _params(cfg)
+    eng = ServingEngine(cfg, params, max_slots=1, t_max=15, page_size=3,
+                        pool_pages=3)
+    assert eng.fabric.n_ports == 2
+    assert eng.kv.pool.n_pages == 4            # rounded up from 3
+    fits = Request(0, list(range(1, 7)), max_new_tokens=6)   # reach 12 → 4pp
+    eng.submit(fits)                           # boundary: must NOT raise
+    with pytest.raises(ValueError, match="pages"):
+        eng.submit(Request(1, list(range(1, 7)),
+                           max_new_tokens=7))  # reach 13 → 5 pages
+    eng.run_to_completion()
+    assert fits.done and len(fits.generated) == 6
+
+
+def test_submit_rounded_pool_boundary_under_pool_shards():
+    """The same boundary under ``--pool-shards``: rounding must also make
+    the page count shard-divisible, and submit() must see that final
+    count (subprocess: the XLA device count is frozen at first import)."""
+    code = """
+import dataclasses
+import jax
+from repro.configs import get_smoke
+from repro.models import api
+from repro.serving.engine import Request, ServingEngine
+
+cfg = dataclasses.replace(get_smoke("starcoder2-15b"), dtype="float32")
+params = api.init_params(cfg, jax.random.PRNGKey(0))
+eng = ServingEngine(cfg, params, max_slots=1, t_max=15, page_size=3,
+                    pool_pages=3, pool_shards=2)
+assert eng.kv.pool.n_pages == 4, eng.kv.pool.n_pages   # N- and shard-rounded
+req = Request(0, list(range(1, 7)), max_new_tokens=6)  # needs all 4 pages
+eng.submit(req)                                        # must not raise
+try:
+    eng.submit(Request(1, list(range(1, 7)), max_new_tokens=7))
+except ValueError:
+    pass
+else:
+    raise AssertionError("5-page reach must stay never-servable")
+eng.run_to_completion()
+assert req.done and len(req.generated) == 6
+print("OK")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = os.pathsep.join([os.path.join(ROOT, "src"), ROOT])
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=540,
+                         cwd=ROOT)
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "OK" in res.stdout
