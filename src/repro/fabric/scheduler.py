@@ -160,6 +160,24 @@ class SchedulerStats:
     rolled back to the last consistent state and replayed after an
     injected mid-step failure.
 
+    The admission-control counters extend the graceful-degradation census
+    into the scheduling layer above the fabric: ``requests_shed`` counts
+    requests rejected at admission instead of missing silently —
+    ``shed_queue_full`` of them bounced off the bounded submit queue
+    (backpressure), ``shed_deadline`` were load-shed because their SLO
+    deadline was provably unmeetable given pool headroom and queue depth.
+    ``slo_missed_served`` / ``slo_missed_shed`` split the deadline-miss
+    census by exit path: a deadlined request that retires late counts
+    *served*, one that exits any other way (shed at submit, shed from the
+    queue once provably unmeetable, rejected as never-servable) counts
+    *shed* — every deadlined request is counted at exactly one exit, so the
+    two sum to the true miss count (the old ``slo_misses`` counted only
+    late retirements).  ``aging_promotions`` counts admissions where
+    anti-starvation aging had boosted the candidate's effective priority
+    above its raw class (queued wait divided by the engine's ``aging``
+    quantum) — the census evidence that the fairness mechanism, not raw
+    rank, got the request in.
+
     ``tokens_dropped`` counts token→expert assignments the MoE capacity
     dispatch dropped (rank past the static per-expert capacity — their
     scatter indices became sentinels and the residual passed through).
@@ -187,6 +205,12 @@ class SchedulerStats:
     swap_in_words: int = 0
     bursts_retried: int = 0
     faults_recovered: int = 0
+    requests_shed: int = 0
+    shed_queue_full: int = 0
+    shed_deadline: int = 0
+    slo_missed_served: int = 0
+    slo_missed_shed: int = 0
+    aging_promotions: int = 0
     tokens_dropped: int = 0
 
     @property

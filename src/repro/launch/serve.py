@@ -18,7 +18,11 @@ spreads the synthetic load over priority classes, ``--preempt
 {swap,recompute,off}`` picks the victim policy (page-level swap over the
 fabric's ``swap/*`` streams, or drop + re-prefill), ``--swap-space-pages``
 caps the host swap space, and ``--check-pool`` runs the free-list
-conservation invariant every step.  On the medusa fabric with kernels
+conservation invariant every step.  ``--aging`` turns on anti-starvation
+aging (queued wait boosts effective priority) and ``--max-queue`` bounds
+the submit queue with shed-on-overflow backpressure; for production-shaped
+traffic with deadlines and per-class latency percentiles use
+``python -m repro.launch.loadgen``.  On the medusa fabric with kernels
 enabled each burst lowers as one fused Pallas launch.
 """
 
@@ -111,6 +115,16 @@ def main():
     ap.add_argument("--check-pool", action="store_true",
                     help="run the pool's free-list conservation invariant "
                          "after every engine step (debug)")
+    ap.add_argument("--aging", type=int, default=0,
+                    help="anti-starvation aging quantum: each this-many "
+                         "steps a queued request waits boosts its "
+                         "effective priority one class, in admission rank "
+                         "and preemption eligibility both (0 = strict "
+                         "priority order, low classes can starve)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bounded submit queue: submits beyond this depth "
+                         "are shed with backpressure "
+                         "(SchedulerStats.shed_queue_full; 0 = unbounded)")
     ap.add_argument("--spec-decode-k", type=int, default=0,
                     help="Medusa-heads speculative decoding: k draft heads "
                          "propose a candidate branch per slot each step and "
@@ -176,7 +190,8 @@ def main():
                             preempt=args.preempt,
                             swap_space_pages=args.swap_space_pages,
                             check_pool=args.check_pool,
-                            spec_decode_k=args.spec_decode_k)
+                            spec_decode_k=args.spec_decode_k,
+                            aging=args.aging, max_queue=args.max_queue)
         prompts = np.asarray(batch["tokens"])
         reqs = [Request(i, prompts[i], max_new_tokens=args.gen_len,
                         priority=i % max(args.priority_classes, 1))
@@ -207,8 +222,13 @@ def main():
                   f"({fs.swap_out_words} words out, {fs.swap_in_words} in "
                   f"over {fs.swap_bursts} swap bursts); "
                   f"{fs.bursts_retried} bursts retried, "
-                  f"{fs.faults_recovered} faults recovered, "
-                  f"{eng.slo_misses} SLO misses")
+                  f"{fs.faults_recovered} faults recovered")
+            print(f"admission: {fs.requests_shed} shed "
+                  f"({fs.shed_queue_full} queue-full, "
+                  f"{fs.shed_deadline} unmeetable-deadline); "
+                  f"SLO misses {fs.slo_missed_served} served late + "
+                  f"{fs.slo_missed_shed} shed; "
+                  f"{fs.aging_promotions} aging promotions")
         else:
             print("page pool: off (dense per-slot reservation)")
         fs = eng.fabric_stats

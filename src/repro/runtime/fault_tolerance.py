@@ -61,6 +61,26 @@ class FaultInjector:
       retried once (``SchedulerStats.bursts_retried``).
     """
 
+    @classmethod
+    def seeded(cls, seed: int, horizon: int, p_fail: float = 0.01,
+               p_exhaust: float = 0.02, n_corrupt: int = 1
+               ) -> "FaultInjector":
+        """A deterministic fault schedule drawn from one seed — the soak
+        harness's injector: each step in ``[1, horizon)`` independently
+        fails mid-step with ``p_fail`` and sees an exhausted pool with
+        ``p_exhaust``, and the first ``n_corrupt`` swap bursts are
+        corrupted.  Same seed → same schedule, so a soak run replays
+        bit-exactly.  (Step 0 is excluded: nothing is live yet, so a fault
+        there exercises no recovery path.)"""
+        import numpy as np
+        rng = np.random.default_rng(seed)
+        draws = rng.random((max(horizon, 1), 2))
+        fail = tuple(s for s in range(1, horizon) if draws[s, 0] < p_fail)
+        exhaust = tuple(s for s in range(1, horizon)
+                        if draws[s, 1] < p_exhaust)
+        return cls(fail_at=fail, exhaust_pool_at=exhaust,
+                   corrupt_swap=tuple(range(n_corrupt)))
+
     def __init__(self, fail_at: tuple = (), exhaust_pool_at: tuple = (),
                  corrupt_swap: tuple = ()):
         self.fail_at = set(fail_at)

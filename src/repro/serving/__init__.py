@@ -1,3 +1,9 @@
 from repro.serving.engine import ServingEngine, Request
+from repro.serving.traffic import (MetricsRecorder, ReplicaRouter,
+                                   TraceRecord, TrafficConfig, drive,
+                                   fault_soak, generate_trace, load_trace,
+                                   save_trace, trace_t_max)
 
-__all__ = ["ServingEngine", "Request"]
+__all__ = ["ServingEngine", "Request", "TrafficConfig", "TraceRecord",
+           "MetricsRecorder", "ReplicaRouter", "generate_trace", "drive",
+           "fault_soak", "save_trace", "load_trace", "trace_t_max"]

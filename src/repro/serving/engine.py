@@ -59,6 +59,23 @@ step, corrupted swap bursts are caught by the parity word and retried, and
 a mid-step failure rolls the engine back to its pre-step snapshot and
 replays (``fabric_stats.faults_recovered``).
 
+**Admission control under production-shaped load** closes the scheduling
+layer above the fabric: every request is stamped with an ``arrival_step``
+at :meth:`submit` (the clock for queue wait, TTFT and aging), the submit
+queue is bounded (``max_queue`` — overflow sheds with backpressure instead
+of growing without bound), **aging** (``aging=K`` steps per class) raises a
+waiting request's *effective* priority so the strict ``(-priority,
+deadline, arrival)`` order can no longer starve low classes indefinitely,
+and SLO-aware **load shedding** rejects a request at admission the moment
+its deadline is provably unmeetable given pool headroom and queue depth —
+counted (``requests_shed``/``shed_deadline``/``shed_queue_full``) instead
+of missing silently at retirement, with the deadline-miss census split
+into ``slo_missed_served`` / ``slo_missed_shed`` by exit path.  The
+production-shaped traffic harness driving all of this lives in
+:mod:`repro.serving.traffic` (seeded generator, ``MetricsRecorder``
+lifecycle stamps, in-process replica router) with the
+``launch/loadgen.py`` CLI on top.
+
 Decoder-only families (dense/moe/ssm/hybrid/vlm); greedy sampling.
 """
 
@@ -99,6 +116,9 @@ class Request:                             # array makes field-eq ambiguous
     deadline: Optional[int] = None         # SLO: retire by this engine step
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    arrival_step: int = -1                 # engine step at submit() — the
+    #                                        clock for queue wait and aging
+    shed_reason: Optional[str] = None      # set when load-shed, never served
     _seq: int = dataclasses.field(default=0, repr=False)   # submit order
 
 
@@ -123,7 +143,8 @@ class ServingEngine:
                  preempt: Optional[str] = None,
                  swap_space_pages: Optional[int] = None,
                  check_pool: bool = False, fault_injector=None,
-                 spec_decode_k: int = 0, draft_fn=None):
+                 spec_decode_k: int = 0, draft_fn=None,
+                 aging: int = 0, max_queue: int = 0, recorder=None):
         assert cfg.family != "audio", "engine covers decoder-only families"
         self.cfg = cfg
         # Medusa-heads speculative decoding (spec_decode_k > 0): every step
@@ -257,7 +278,23 @@ class ServingEngine:
         self._swap_pages_used = 0
         self._submit_seq = 0
         self._step_count = 0
-        self.slo_misses = 0
+        # anti-starvation aging: every `aging` steps a candidate waits past
+        # its arrival_step, its *effective* priority rises one class, so the
+        # strict (-priority, deadline, arrival) order can no longer starve
+        # low classes indefinitely under sustained high-priority churn.
+        # 0 = off (the PR 7 strict order, exactly).
+        if aging < 0:
+            raise ValueError(f"aging must be >= 0 steps/class, got {aging}")
+        self.aging = aging
+        # bounded submit queue: submit() sheds (backpressure) once this many
+        # requests are already queued.  0 = unbounded (the seed behaviour).
+        if max_queue < 0:
+            raise ValueError(f"max_queue must be >= 0, got {max_queue}")
+        self.max_queue = max_queue
+        # lifecycle observer (duck-typed, e.g. serving.traffic.
+        # MetricsRecorder): record_admit/record_first_token/record_retire/
+        # record_shed, all (req, step)-shaped — None = no observation
+        self.recorder = recorder
 
         # one scheduler instance per decode step: per-step KV banking (and
         # the serve_fsdp weight stream) runs as one read + one write network
@@ -314,11 +351,29 @@ class ServingEngine:
         return self.kv.caches
 
     # -- admission -----------------------------------------------------------
-    def submit(self, req: Request) -> None:
-        """Enqueue a request, rejecting what could never run: a prompt the
-        cache can't hold, or — in pool mode — a reserved reach larger than
-        the whole pool (it would gate the head of the queue forever)."""
+    def submit(self, req: Request) -> str:
+        """Enqueue a request; returns ``"queued"`` or ``"shed"``.
+
+        Never-servable requests still raise (a prompt the cache can't hold,
+        or — in pool mode — a reserved reach larger than the whole pool,
+        which would gate the head of the queue forever); a deadlined one
+        counts ``slo_missed_shed`` before the raise, so no exit path is
+        uncounted.  Two admission-control gates shed instead of queueing
+        (``req.shed_reason`` set, census counted, ``done`` marked so
+        drivers drain):
+
+        * **backpressure** — the bounded submit queue (``max_queue``) is
+          full (``shed_queue_full``);
+        * **SLO load shedding** — the deadline is provably unmeetable:
+          even admitted *this* step the request cannot retire by its
+          deadline, or — with preemption off, so pages and slots free only
+          at retirement — the earliest live-slot retirement plus the
+          request's own service floor already overshoots it
+          (``shed_deadline``).  Rejecting up front beats missing silently
+          at retirement.
+        """
         if len(req.prompt) + 1 > self.t_max:
+            self._count_shed(req, None)        # counted even though raised
             raise ValueError(
                 f"request {req.rid}: prompt of {len(req.prompt)} tokens "
                 f"cannot decode within t_max={self.t_max}")
@@ -326,20 +381,118 @@ class ServingEngine:
             reach = min(len(req.prompt) + req.max_new_tokens, self.t_max)
             need = self.kv.table.pages_for(reach)
             if need > self.kv.pool.n_pages:
+                self._count_shed(req, None)
                 raise ValueError(
                     f"request {req.rid}: reach of {reach} tokens reserves "
                     f"{need} pages but the pool holds {self.kv.pool.n_pages}"
                     f" — it would block the queue forever")
+        req.arrival_step = self._step_count
+        if self.max_queue and len(self.queue) >= self.max_queue:
+            self._shed(req, "queue_full")
+            return "shed"
+        if req.deadline is not None and self._provably_unmeetable(req):
+            self._shed(req, "deadline")
+            return "shed"
         req._seq = self._submit_seq
         self._submit_seq += 1
         self.queue.append(req)
+        return "queued"
+
+    # -- SLO-aware load shedding ---------------------------------------------
+    def _earliest_retire(self, req: Request, admit_step: int) -> int:
+        """The provably earliest step ``req`` can retire if (re-)admitted at
+        ``admit_step``: one committed token per engine step, plus the
+        prefill's first token for fresh requests, capped by the cache depth
+        (the ``pos + 1 >= t_max`` retirement arm) — exact, not heuristic,
+        so shedding on it can never reject a meetable request."""
+        g = len(req.generated)
+        # fresh install appends the prefill argmax AND decodes in the same
+        # step (+2); a swap-in resumes with its pending token (+1)
+        first_step_tokens = 2 if g == 0 else 1
+        by_tokens = req.max_new_tokens - g - first_step_tokens
+        by_depth = self.t_max - len(req.prompt) - g - first_step_tokens
+        return admit_step + max(0, min(by_tokens, by_depth))
+
+    def _provably_unmeetable(self, req: Request) -> bool:
+        """True when ``req.deadline`` cannot be met under ANY schedule.  The
+        base proof assumes immediate admission; with preemption off the
+        admission floor tightens — slots and pages free only at retirement,
+        so when none are available now, the earliest admission is one step
+        past the earliest *exact* live retirement (queue depth and pool
+        headroom can only push it later, never earlier)."""
+        admit = self._step_count
+        if self.preempt == "off" and self.aging == 0:
+            live = [s for s in range(self.max_slots)
+                    if self.active[s] is not None]
+            blocked = len(live) == self.max_slots
+            if self.kv.paged and not blocked:
+                reach = min(len(req.prompt) + req.max_new_tokens, self.t_max)
+                blocked = (self._pool_headroom()
+                           < self.kv.table.pages_for(reach))
+            if blocked and live:
+                admit = 1 + min(
+                    self._earliest_retire(self.active[s], self._step_count)
+                    for s in live)
+        return self._earliest_retire(req, admit) > req.deadline
+
+    def _count_shed(self, req: Request, reason: Optional[str]) -> None:
+        stats = self.fabric_stats
+        stats.requests_shed += 1
+        if reason == "queue_full":
+            stats.shed_queue_full += 1
+        elif reason == "deadline":
+            stats.shed_deadline += 1
+        if req.deadline is not None:
+            stats.slo_missed_shed += 1
+
+    def _shed(self, req: Request, reason: str) -> None:
+        """Reject ``req`` at admission with a counted reason — the request
+        is marked done-without-output so drivers drain, and the deadline
+        miss (if any) lands in ``slo_missed_shed`` instead of vanishing."""
+        self._count_shed(req, reason)
+        req.shed_reason = reason
+        req.done = True
+        if self.recorder is not None:
+            self.recorder.record_shed(req, self._step_count, reason)
+
+    def _shed_unmeetable_queued(self) -> None:
+        """Admission-time recheck: a queued (or parked) request whose
+        deadline became provably unmeetable while it waited is shed *now*
+        — so a deadlined request can never sit in the queue past its
+        deadline, and the drain census has no silent residue.  Parked
+        victims release their swap space."""
+        for req in [r for r in self.queue if r.deadline is not None]:
+            if (self._earliest_retire(req, self._step_count) > req.deadline):
+                self.queue.remove(req)
+                self._shed(req, "deadline")
+        for rid, sw in list(self._swapped.items()):
+            req = sw.req
+            if req.deadline is None:
+                continue
+            if self._earliest_retire(req, self._step_count) > req.deadline:
+                del self._swapped[rid]
+                if sw.record is not None:
+                    self._swap_pages_used -= sw.record.mapped
+                self._shed(req, "deadline")
+
+    def _eff_priority(self, req: Request) -> int:
+        """Effective priority under anti-starvation aging: the raw class
+        plus one for every ``aging`` steps waited since arrival.  Both
+        admission rank and preemption eligibility use it, so an aged
+        request is not just admitted ahead of fresh higher classes — it
+        can preempt them, and they cannot evict it back (its age only
+        grows), which bounds every request's wait."""
+        if not self.aging or req.arrival_step < 0:
+            return req.priority
+        return req.priority + (self._step_count - req.arrival_step) // self.aging
 
     def _rank(self, req: Request):
-        """Admission order: priority class first, earliest SLO deadline
-        next, submit order last (FIFO within a class — uniform priorities
-        reduce to the seed's queue order exactly)."""
+        """Admission order: effective priority class first (aging boosts
+        queued wait — raw priority exactly when ``aging == 0``), earliest
+        SLO deadline next, submit order last (FIFO within a class —
+        uniform priorities reduce to the seed's queue order exactly)."""
         dl = float("inf") if req.deadline is None else req.deadline
-        return (-req.priority, dl, req._seq)
+        return (-self._eff_priority(req), dl, req._seq)
 
     def _candidates(self) -> list:
         """Admissible work, best first.  Swapped requests re-admit ahead of
@@ -362,6 +515,7 @@ class ServingEngine:
         candidate outranks live work, preempts victims instead of waiting
         (:meth:`_make_room`).  An injected pool-exhaustion fault backs the
         whole wave off for the step."""
+        self._shed_unmeetable_queued()
         if (self.kv.paged and self.fault_injector is not None
                 and self.fault_injector.pool_exhausted(self._step_count)):
             return
@@ -403,6 +557,9 @@ class ServingEngine:
         re-prefill everything decoded so far (recompute arm) — both resume
         the exact pre-eviction state (cache = ``prompt + generated[:-1]``,
         the last token still pending decode)."""
+        req0 = cand.req if isinstance(cand, _Swapped) else cand
+        if self.aging and self._eff_priority(req0) > req0.priority:
+            self.fabric_stats.aging_promotions += 1
         if isinstance(cand, _Swapped):
             req = cand.req
             del self._swapped[req.rid]
@@ -433,6 +590,10 @@ class ServingEngine:
             first = int(np.argmax(np.asarray(logits[0, -1])))
             req.generated.append(first)
             self.tokens[slot, 0] = first
+            if self.recorder is not None:
+                self.recorder.record_first_token(req, self._step_count)
+        if self.recorder is not None:
+            self.recorder.record_admit(req, self._step_count)
         self._admitted_at[slot] = self._step_count
         # draft branches are a per-tenure cache: a slot changing hands (or
         # a request resuming after eviction) starts with a drained branch
@@ -448,10 +609,14 @@ class ServingEngine:
         wouldn't make room, nothing is evicted."""
         if self.preempt == "off":
             return False
+        # effective (aged) priorities on both sides: an aged candidate can
+        # evict fresher high classes, and once admitted its own growing age
+        # shields it from them — without aging this is raw priority exactly
         victims = [s for s in range(self.max_slots)
                    if self.active[s] is not None and s not in protected
-                   and self.active[s].priority < req.priority]
-        victims.sort(key=lambda s: (self.active[s].priority,
+                   and (self._eff_priority(self.active[s])
+                        < self._eff_priority(req))]
+        victims.sort(key=lambda s: (self._eff_priority(self.active[s]),
                                     -self.kv.pool.mapped(s),
                                     self._admitted_at.get(s, 0)))
         headroom = self._pool_headroom()
@@ -583,7 +748,9 @@ class ServingEngine:
                     or self.pos[s] + 1 >= self.t_max):
                 req.done = True
                 if req.deadline is not None and step_no > req.deadline:
-                    self.slo_misses += 1
+                    self.fabric_stats.slo_missed_served += 1
+                if self.recorder is not None:
+                    self.recorder.record_retire(req, step_no)
                 self.active[s] = None
                 # return the slot's pages (true reclamation in pool mode);
                 # stale frames are masked by the per-slot positions and
@@ -633,10 +800,54 @@ class ServingEngine:
         """Fraction of proposed draft tokens the target verified."""
         return self.spec_accepted / max(1, self.spec_proposed)
 
+    @property
+    def step_count(self) -> int:
+        """Engine steps taken so far — the clock every lifecycle stamp,
+        deadline and aging computation is measured in."""
+        return self._step_count
+
+    @property
+    def drained(self) -> bool:
+        """No live, queued or parked work left."""
+        return (not self.queue and not self._swapped
+                and all(r is None for r in self.active))
+
+    @property
+    def slo_misses(self) -> int:
+        """Total deadline misses across every exit path: late retirements
+        (``slo_missed_served``) plus deadlined requests shed at admission
+        or from the queue (``slo_missed_shed``).  The pre-harness counter
+        only saw the first kind."""
+        return (self.fabric_stats.slo_missed_served
+                + self.fabric_stats.slo_missed_shed)
+
+    def pending_census(self) -> str:
+        """Why-can't-anything-advance diagnosis: per-class queue depths
+        over live, queued and parked work, pool headroom, and swap-space
+        occupancy — the stall story ``run_to_completion`` raises with."""
+        def by_class(reqs):
+            depth: Dict[int, int] = {}
+            for r in reqs:
+                depth[r.priority] = depth.get(r.priority, 0) + 1
+            return ("{" + ", ".join(f"class{p}: {n}" for p, n in
+                                    sorted(depth.items())) + "}"
+                    if depth else "{}")
+        live = [r for r in self.active if r is not None]
+        parked = [w.req for w in self._swapped.values()]
+        pool = (f"pool headroom {self._pool_headroom()} of "
+                f"{self.kv.pool.n_pages} pages "
+                f"({self.kv.pool.free_pages} free)" if self.kv.paged
+                else "pool off (dense reservation)")
+        cap = self.swap_space_pages or "unbounded"
+        return (f"live {by_class(live)}, queued {by_class(self.queue)}, "
+                f"swapped {by_class(parked)}; {pool}; "
+                f"swap space {self._swap_pages_used} pages used (cap {cap})")
+
     def run_to_completion(self, max_steps: int = 10_000) -> None:
         """Step until every submitted request retires.  Raises — rather
         than silently returning with work stranded — when ``max_steps``
-        runs out first."""
+        runs out first, naming per-class queue depths, pool headroom and
+        swap occupancy so the stall is diagnosable."""
         for _ in range(max_steps):
             if self.step() == 0 and not self.queue and not self._swapped:
                 return
@@ -644,7 +855,7 @@ class ServingEngine:
                    + len(self._swapped))
         raise RuntimeError(
             f"run_to_completion: {max_steps} steps exhausted with {pending} "
-            f"requests still pending (live + queued + swapped) — the "
+            f"requests still pending — {self.pending_census()} — the "
             f"workload does not fit, or admission is starved")
 
     # -- fault recovery ------------------------------------------------------
@@ -667,7 +878,6 @@ class ServingEngine:
             admitted=dict(self._admitted_at),
             swap_used=self._swap_pages_used,
             submit_seq=self._submit_seq,
-            slo=self.slo_misses,
             last_logits=self.last_logits,
             table_used=self.kv.table.used.copy(),
             dirty=self.kv._dirty.copy(),
@@ -697,7 +907,6 @@ class ServingEngine:
         self._admitted_at = snap["admitted"]
         self._swap_pages_used = snap["swap_used"]
         self._submit_seq = snap["submit_seq"]
-        self.slo_misses = snap["slo"]
         self.last_logits = snap["last_logits"]
         self.kv.table.used[:] = snap["table_used"]
         self.kv._dirty[:] = snap["dirty"]

@@ -40,3 +40,42 @@ def test_serve_cli_engine_burst_scheduled(tmp_path):
         env=ENV, capture_output=True, text=True, timeout=560, cwd=ROOT)
     assert "tok/s" in r.stdout, (r.stdout[-1200:], r.stderr[-800:])
     assert "network calls" in r.stdout, r.stdout[-1200:]
+
+
+@pytest.mark.slow
+def test_loadgen_cli(tmp_path):
+    """Traffic harness CLI: seeded trace, aging, bounded queue, trace
+    round-trip, and the BENCH_serving.json trajectory append."""
+    bench = str(tmp_path / "bench.json")
+    trace = str(tmp_path / "trace.json")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.loadgen", "--smoke",
+         "--requests", "8", "--rate", "0.8", "--aging", "6",
+         "--max-queue", "6", "--deadline-frac", "0.3",
+         "--trace-out", trace, "--bench-out", bench],
+        env=ENV, capture_output=True, text=True, timeout=560, cwd=ROOT)
+    assert "aggregate" in r.stdout, (r.stdout[-1200:], r.stderr[-800:])
+    assert "degradation census" in r.stdout
+    assert "STARVED" not in r.stdout
+    import json
+    with open(bench) as f:
+        runs = json.load(f)["runs"]
+    assert len(runs) == 1 and runs[0]["mode"] == "drive"
+    assert "aggregate" in runs[0]["cells"]
+    assert os.path.exists(trace)
+
+
+@pytest.mark.slow
+def test_loadgen_cli_soak_replicas(tmp_path):
+    """Fault-soak lane shape: oversubscribed pool + seeded injector over a
+    2-replica fleet, token-exact convergence asserted in-process."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.loadgen", "--smoke",
+         "--requests", "8", "--rate", "0.8", "--replicas", "2",
+         "--pool-pages", "10", "--preempt", "swap", "--soak",
+         "--soak-p-fail", "0.05", "--soak-p-exhaust", "0.1",
+         "--no-bench"],
+        env=ENV, capture_output=True, text=True, timeout=560, cwd=ROOT)
+    assert "fault soak: token-exact" in r.stdout, (r.stdout[-1200:],
+                                                   r.stderr[-800:])
+    assert "STARVED" not in r.stdout

@@ -1,0 +1,447 @@
+"""Production-shaped traffic harness: seeded load generation, lifecycle
+metrics, anti-starvation aging, SLO-aware load shedding, backpressure,
+the replica router, and fault soak.
+
+The acceptance bar:
+
+* the generator is bit-replayable (same ``TrafficConfig`` → identical
+  trace; JSON round-trip exact) and its knobs (arrival modes, class mix,
+  deadline mix) actually shape the trace;
+* **starvation regression**: under sustained high-priority churn a
+  low-priority request starves with ``aging=0`` (strict ``_rank`` order —
+  the PR 7 residual) but with aging on it retires within the provable
+  wait bound AND its tokens are bit-identical to an uncontended reference
+  (aging reorders, it never corrupts);
+* **load shedding is provable**: a deadline that cannot be met under any
+  schedule is rejected at ``submit()`` with a counted reason, a meetable
+  one is never rejected, and a queued request whose deadline becomes
+  unmeetable while it waits is shed *before* the deadline passes — so no
+  deadlined request is ever silently served late;
+* the SLO census counts at **every** exit path (late retire →
+  ``slo_missed_served``; shed with a deadline → ``slo_missed_shed``;
+  never-servable raise included), and ``slo_misses`` is their sum;
+* ``run_to_completion``'s stall error names per-class depths, pool
+  headroom and swap occupancy;
+* the fault-soak harness converges token-exact with zero page leaks.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.kernels import ops
+from repro.models import api
+from repro.runtime.fault_tolerance import FaultInjector
+from repro.serving import (MetricsRecorder, ReplicaRouter, Request,
+                           ServingEngine, TraceRecord, TrafficConfig, drive,
+                           fault_soak, generate_trace, load_trace,
+                           save_trace, trace_t_max)
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _cfg():
+    return dataclasses.replace(get_smoke("starcoder2-15b"), dtype="float32")
+
+
+_PARAMS = {}
+
+
+def _params(cfg):
+    if cfg.name not in _PARAMS:
+        _PARAMS[cfg.name] = api.init_params(cfg, KEY)
+    return _PARAMS[cfg.name]
+
+
+def _prompt(rid: int, length: int, vocab: int) -> np.ndarray:
+    return np.asarray(jax.random.randint(jax.random.fold_in(KEY, 2000 + rid),
+                                         (length,), 0, vocab), np.int32)
+
+
+def _engine(cfg, **kw):
+    kw.setdefault("max_slots", 1)
+    kw.setdefault("t_max", 16)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("check_pool", True)
+    return ServingEngine(cfg, _params(cfg), **kw)
+
+
+# ---------------------------------------------------------------------------
+# trace generation: replayability + knobs (no model, fast)
+# ---------------------------------------------------------------------------
+
+def _trace_eq(a, b):
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        assert (x.rid, x.arrival_step, x.max_new_tokens, x.priority,
+                x.deadline) == (y.rid, y.arrival_step, y.max_new_tokens,
+                                y.priority, y.deadline)
+        np.testing.assert_array_equal(x.prompt, y.prompt)
+
+
+def test_trace_deterministic_and_seed_sensitive():
+    cfg = TrafficConfig(seed=3, n_requests=40, deadline_frac=0.5)
+    _trace_eq(generate_trace(cfg), generate_trace(cfg))
+    other = generate_trace(dataclasses.replace(cfg, seed=4))
+    same = generate_trace(cfg)
+    assert any((x.arrival_step, len(x.prompt)) != (y.arrival_step,
+                                                   len(y.prompt))
+               for x, y in zip(same, other))
+
+
+def test_trace_shape_knobs():
+    # heavy-tailed lengths stay clipped; class mix favours class 0
+    cfg = TrafficConfig(seed=0, n_requests=200, classes=3,
+                        prompt_min=2, prompt_max=12, gen_min=2, gen_max=9,
+                        deadline_frac=0.3)
+    tr = generate_trace(cfg)
+    assert all(2 <= len(t.prompt) <= 12 for t in tr)
+    assert all(2 <= t.max_new_tokens <= 9 for t in tr)
+    counts = [sum(t.priority == c for t in tr) for c in range(3)]
+    assert counts[0] > counts[1] > 0          # geometric default weights
+    n_dead = sum(t.deadline is not None for t in tr)
+    assert 0 < n_dead < len(tr)
+    for t in tr:
+        if t.deadline is not None:            # slack 3.0 over service floor
+            assert t.deadline == t.arrival_step + 3 * (t.max_new_tokens + 2)
+    assert trace_t_max(tr) == max(len(t.prompt) + t.max_new_tokens
+                                  for t in tr) + 1
+    # diurnal bursts compress arrivals vs flat poisson at the same rate
+    flat = generate_trace(TrafficConfig(seed=1, n_requests=100, rate=0.5))
+    bursty = generate_trace(TrafficConfig(
+        seed=1, n_requests=100, rate=0.5, arrival="diurnal",
+        burst_prob=0.2, burst_mult=6.0))
+    assert max(t.arrival_step for t in bursty) != \
+        max(t.arrival_step for t in flat)
+
+
+def test_trace_config_validation():
+    with pytest.raises(ValueError, match="arrival"):
+        TrafficConfig(arrival="uniform").validate()
+    with pytest.raises(ValueError, match="class"):
+        TrafficConfig(classes=0).validate()
+    with pytest.raises(ValueError, match="class_weights"):
+        TrafficConfig(classes=3, class_weights=[1.0]).validate()
+    with pytest.raises(ValueError, match="deadline_frac"):
+        TrafficConfig(deadline_frac=1.5).validate()
+
+
+def test_trace_json_roundtrip(tmp_path):
+    tr = generate_trace(TrafficConfig(seed=9, n_requests=25,
+                                      deadline_frac=0.4))
+    path = str(tmp_path / "trace.json")
+    save_trace(path, tr)
+    _trace_eq(tr, load_trace(path))
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware load shedding (satellite: provable, counted, every exit path)
+# ---------------------------------------------------------------------------
+
+def test_unmeetable_deadline_shed_at_submit():
+    ops.use_kernels(False)
+    cfg = _cfg()
+    eng = _engine(cfg)
+    # fresh request: prompt 4 + gen 6 in t_max 16 → earliest retire at
+    # step 0 + min(6-2, 16-4-2) = 4; deadline 3 is provably unmeetable
+    req = Request(0, _prompt(0, 4, cfg.vocab_size), max_new_tokens=6,
+                  deadline=3)
+    assert eng.submit(req) == "shed"
+    assert req.done and req.shed_reason == "deadline" and not req.generated
+    fs = eng.fabric_stats
+    assert (fs.requests_shed, fs.shed_deadline, fs.slo_missed_shed) == \
+        (1, 1, 1)
+    assert fs.slo_missed_served == 0 and eng.slo_misses == 1
+    # the tightest meetable deadline (== the exact floor) is NEVER shed —
+    # and the engine then actually meets it
+    ok = Request(1, _prompt(0, 4, cfg.vocab_size), max_new_tokens=6,
+                 deadline=4)
+    assert eng.submit(ok) == "queued"
+    eng.run_to_completion()
+    assert ok.done and ok.shed_reason is None and len(ok.generated) == 6
+    assert eng.fabric_stats.slo_missed_served == 0
+
+
+def test_preempt_off_tightens_admission_floor():
+    ops.use_kernels(False)
+    cfg = _cfg()
+    eng = _engine(cfg, preempt="off")
+    long = Request(0, _prompt(0, 4, cfg.vocab_size), max_new_tokens=8)
+    eng.submit(long)
+    eng.step()                        # long is live: retires at step >= 7
+    # with preemption off the slot frees only at retirement, so a fresh
+    # request needing the slot can prove deadline 9 hopeless NOW (earliest
+    # admit step 8, own floor +2) even though 9 > its immediate floor
+    late = Request(1, _prompt(1, 4, cfg.vocab_size), max_new_tokens=6,
+                   deadline=9)
+    assert eng.submit(late) == "shed" and late.shed_reason == "deadline"
+    fits = Request(2, _prompt(2, 4, cfg.vocab_size), max_new_tokens=6,
+                   deadline=30)
+    assert eng.submit(fits) == "queued"
+    eng.run_to_completion()
+    assert fits.done and len(fits.generated) == 6
+
+
+def test_queued_deadline_shed_before_it_passes():
+    ops.use_kernels(False)
+    cfg = _cfg()
+    # swap mode: the submit-time floor does NOT tighten (preemption can
+    # free pages any step), so the deadlined request queues — then the
+    # admission-time recheck sheds it the moment waiting made the deadline
+    # provably unmeetable, NOT silently after it passed
+    eng = _engine(cfg, preempt="swap")
+    hog = Request(0, _prompt(0, 4, cfg.vocab_size), max_new_tokens=8,
+                  priority=1)
+    eng.submit(hog)
+    eng.step()
+    req = Request(1, _prompt(1, 4, cfg.vocab_size), max_new_tokens=4,
+                  deadline=eng.step_count + 2)   # floor: +2 → meetable now
+    assert eng.submit(req) == "queued"           # lower class: waits
+    eng.run_to_completion()
+    assert hog.done and len(hog.generated) == 8
+    assert req.done and req.shed_reason == "deadline"
+    assert eng.fabric_stats.slo_missed_shed == 1
+    assert eng.fabric_stats.slo_missed_served == 0
+
+
+def test_served_late_counts_slo_missed_served():
+    ops.use_kernels(False)
+    cfg = _cfg()
+    eng = _engine(cfg)
+    req = Request(0, _prompt(0, 4, cfg.vocab_size), max_new_tokens=4)
+    eng.submit(req)
+    eng.step()
+    # the deadline tightens AFTER admission (external cancellation shape —
+    # admission-time shedding can no longer help): the late retirement
+    # must land in slo_missed_served, not vanish
+    req.deadline = 0
+    eng.run_to_completion()
+    assert req.done and len(req.generated) == 4
+    fs = eng.fabric_stats
+    assert fs.slo_missed_served == 1 and fs.slo_missed_shed == 0
+    assert eng.slo_misses == 1
+
+
+def test_never_servable_raise_still_counts():
+    ops.use_kernels(False)
+    cfg = _cfg()
+    eng = _engine(cfg, t_max=8)
+    with pytest.raises(ValueError, match="cannot decode"):
+        eng.submit(Request(0, _prompt(0, 8, cfg.vocab_size),
+                           max_new_tokens=2, deadline=50))
+    fs = eng.fabric_stats
+    assert fs.requests_shed == 1 and fs.slo_missed_shed == 1
+
+
+def test_shed_serves_survivors_bit_identical():
+    ops.use_kernels(False)
+    cfg = _cfg()
+    eng = _engine(cfg, max_slots=2)
+    a = Request(0, _prompt(0, 5, cfg.vocab_size), max_new_tokens=4)
+    b = Request(1, _prompt(1, 4, cfg.vocab_size), max_new_tokens=4,
+                deadline=0)                      # born unmeetable
+    c = Request(2, _prompt(2, 6, cfg.vocab_size), max_new_tokens=4)
+    assert [eng.submit(r) for r in (a, b, c)] == ["queued", "shed", "queued"]
+    eng.run_to_completion()
+    ref = _engine(cfg, max_slots=2)
+    ra = Request(0, _prompt(0, 5, cfg.vocab_size), max_new_tokens=4)
+    rc = Request(2, _prompt(2, 6, cfg.vocab_size), max_new_tokens=4)
+    ref.submit(ra), ref.submit(rc)
+    ref.run_to_completion()
+    assert a.generated == ra.generated and c.generated == rc.generated
+    assert b.generated == []
+
+
+# ---------------------------------------------------------------------------
+# backpressure (bounded submit queue)
+# ---------------------------------------------------------------------------
+
+def test_max_queue_backpressure():
+    ops.use_kernels(False)
+    cfg = _cfg()
+    eng = _engine(cfg, max_queue=1)
+    kept = Request(0, _prompt(0, 4, cfg.vocab_size), max_new_tokens=3)
+    spill = Request(1, _prompt(1, 4, cfg.vocab_size), max_new_tokens=3,
+                    deadline=40)
+    assert eng.submit(kept) == "queued"
+    assert eng.submit(spill) == "shed"
+    assert spill.shed_reason == "queue_full"
+    fs = eng.fabric_stats
+    assert fs.shed_queue_full == 1 and fs.requests_shed == 1
+    assert fs.slo_missed_shed == 1      # the spilled one carried a deadline
+    eng.run_to_completion()
+    assert kept.done and len(kept.generated) == 3
+    # the queue drained: submits flow again
+    late = Request(2, _prompt(2, 4, cfg.vocab_size), max_new_tokens=3)
+    assert eng.submit(late) == "queued"
+    eng.run_to_completion()
+    assert late.done and len(late.generated) == 3
+
+
+def test_engine_rejects_bad_admission_knobs():
+    ops.use_kernels(False)
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="aging"):
+        _engine(cfg, aging=-1)
+    with pytest.raises(ValueError, match="max_queue"):
+        _engine(cfg, max_queue=-1)
+
+
+# ---------------------------------------------------------------------------
+# anti-starvation aging (satellite: the PR 7 fairness residual)
+# ---------------------------------------------------------------------------
+
+def _churn(cfg, aging, steps):
+    """Sustained high-priority churn against one low-priority request:
+    keep >= 2 class-1 requests pending at all times, so with strict
+    priority order the class-0 request can never reach the single slot."""
+    eng = _engine(cfg, preempt="off", aging=aging)
+    low = Request(0, _prompt(0, 4, cfg.vocab_size), max_new_tokens=4)
+    eng.submit(low)
+    highs, nxt = [], 1
+    for _ in range(steps):
+        while sum(not h.done for h in highs) < 2:
+            h = Request(nxt, _prompt(nxt, 4, cfg.vocab_size),
+                        max_new_tokens=4, priority=1)
+            eng.submit(h)
+            highs.append(h)
+            nxt += 1
+        eng.step()
+        if low.done:
+            break
+    return eng, low
+
+
+def test_starvation_without_aging_fixed_by_aging():
+    ops.use_kernels(False)
+    cfg = _cfg()
+    AGING, STEPS = 4, 40
+    # aging off: strict _rank order — the low request is still queued
+    # after 40 steps of churn (the starvation the harness measures)
+    eng0, low0 = _churn(cfg, aging=0, steps=STEPS)
+    assert not low0.done and low0 in eng0.queue
+    assert eng0.fabric_stats.aging_promotions == 0
+    # aging on: after AGING * (gap+1) waited steps the low request's
+    # effective class passes the churn's, it admits, and it retires within
+    # the provable bound: promotion wait + one live residency + own service
+    eng1, low1 = _churn(cfg, aging=AGING, steps=STEPS)
+    assert low1.done and low1.shed_reason is None
+    assert eng1.step_count <= 2 * AGING + 4 + 4 + 2
+    assert eng1.fabric_stats.aging_promotions >= 1
+    # fairness never costs correctness: tokens match an uncontended run
+    ref = _engine(cfg)
+    r = Request(0, _prompt(0, 4, cfg.vocab_size), max_new_tokens=4)
+    ref.submit(r)
+    ref.run_to_completion()
+    assert low1.generated == r.generated
+
+
+def test_aged_request_not_preempted_back():
+    ops.use_kernels(False)
+    cfg = _cfg()
+    # swap mode: an aged-up class-0 request that reached the slot must not
+    # be evicted by a fresh class-1 arrival — its effective class only
+    # grows, so preemption eligibility uses the same aged rank
+    eng = _engine(cfg, preempt="swap", aging=2)
+    low = Request(0, _prompt(0, 4, cfg.vocab_size), max_new_tokens=6)
+    eng.submit(low)
+    eng.step()                         # low is live, aging from step 0
+    for _ in range(4):
+        eng.step()                     # low's effective class reaches 2
+    fresh = Request(1, _prompt(1, 4, cfg.vocab_size), max_new_tokens=4,
+                    priority=1)
+    eng.submit(fresh)
+    eng.run_to_completion()
+    assert eng.fabric_stats.preemptions == 0
+    assert low.done and len(low.generated) == 6
+    assert fresh.done and len(fresh.generated) == 4
+
+
+# ---------------------------------------------------------------------------
+# stall census (satellite: diagnosable run_to_completion error)
+# ---------------------------------------------------------------------------
+
+def test_stall_error_names_census():
+    ops.use_kernels(False)
+    cfg = _cfg()
+    eng = _engine(cfg, preempt="swap")
+    eng.submit(Request(0, _prompt(0, 4, cfg.vocab_size), max_new_tokens=6))
+    eng.submit(Request(1, _prompt(1, 4, cfg.vocab_size), max_new_tokens=6,
+                       priority=1))
+    with pytest.raises(RuntimeError) as ei:
+        eng.run_to_completion(max_steps=2)
+    msg = str(ei.value)
+    assert "class0: 1" in msg and "class1: 1" in msg
+    assert "pool headroom" in msg and "swap space" in msg
+    eng.run_to_completion()            # and the workload itself was fine
+
+
+# ---------------------------------------------------------------------------
+# recorder + drive + router (tentpole integration)
+# ---------------------------------------------------------------------------
+
+_TCFG = TrafficConfig(seed=2, n_requests=6, rate=0.8, prompt_mean=5.0,
+                      prompt_max=8, gen_mean=4.0, gen_max=6, classes=2,
+                      vocab=64)
+
+
+def test_drive_records_lifecycle():
+    ops.use_kernels(False)
+    cfg = _cfg()
+    trace = generate_trace(dataclasses.replace(_TCFG, vocab=cfg.vocab_size))
+    eng = _engine(cfg, max_slots=2, t_max=trace_t_max(trace), aging=4)
+    rec = drive(eng, trace, max_steps=500)
+    rep = rec.report()
+    agg = rep["aggregate"]
+    assert agg["n"] == 6 and agg["served"] == 6 and agg["shed"] == 0
+    assert agg["tokens"] == sum(t.max_new_tokens for t in trace)
+    assert agg["goodput"] == 1.0
+    # stamps are coherent: submit <= admit = first token (prefill commits
+    # the first token in the admit step), wait/ttft percentiles finite
+    assert agg["ttft_p50"] is not None and agg["ttft_p50"] >= 0
+    assert agg["wait_p99"] >= agg["wait_p50"] >= 0
+    assert rec.starved() == []
+    assert set(rec.requests) == {t.rid for t in trace}
+    assert "aggregate" in rec.format_table()
+    per_class = [k for k in rep if k.startswith("class")]
+    assert len(per_class) == len({t.priority for t in trace})
+
+
+def test_replica_router_balances_and_aggregates():
+    ops.use_kernels(False)
+    cfg = _cfg()
+    trace = generate_trace(dataclasses.replace(_TCFG, vocab=cfg.vocab_size))
+    router = ReplicaRouter([
+        _engine(cfg, t_max=trace_t_max(trace)) for _ in range(2)])
+    rec = drive(router, trace, max_steps=500)
+    assert rec.report()["aggregate"]["served"] == 6
+    # least-loaded routing actually spread the trace over both replicas
+    per_engine = [e.fabric_stats.prefill_bursts for e in router.engines]
+    assert all(n > 0 for n in per_engine)
+    stats = router.stats()
+    assert stats["prefill_bursts"] == sum(per_engine)
+    assert router.drained and router.pending_census()
+
+
+def test_fault_soak_converges():
+    ops.use_kernels(False)
+    cfg = _cfg()
+    trace = generate_trace(dataclasses.replace(
+        _TCFG, deadline_frac=0.3, vocab=cfg.vocab_size))
+    t_max = trace_t_max(trace)
+
+    def make_engine(fault_injector=None):
+        return _engine(cfg, max_slots=2, t_max=t_max, pool_pages=8,
+                       preempt="swap", fault_injector=fault_injector)
+
+    inj = FaultInjector.seeded(7, 100, p_fail=0.05, p_exhaust=0.1,
+                               n_corrupt=1)
+    ref_rec, soak_rec, target = fault_soak(make_engine, trace,
+                                           max_steps=500, injector=inj)
+    fs = target.fabric_stats
+    assert fs.faults_recovered + fs.bursts_retried + \
+        len(inj.exhaust_fired) > 0          # the soak actually hit faults
+    assert soak_rec.report()["aggregate"]["served"] >= 1
